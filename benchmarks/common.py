@@ -1,0 +1,113 @@
+"""Shared benchmark harness.
+
+All RL benchmarks train the same tiny LM (SFT warm-started once, cached)
+on the synthetic verifiable-math task and differ only in loss type /
+latency setting — mirroring the paper's experimental matrix at CPU scale.
+Set BENCH_STEPS / BENCH_FULL=1 to change budgets.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import (HeteroConfig, ModelConfig, RLConfig, TrainConfig,
+                          ATTN, MLP)
+from repro.core.diagnostics import MetricsHistory, best_last_gap
+from repro.data import ArithmeticTask, Tokenizer
+from repro.hetero import HeteroRuntime, run_online
+from repro.launch.train import make_eval_fn, sft_warmstart
+from repro.models import init_params
+from repro.training import TrainState, init_state
+
+FULL = os.environ.get("BENCH_FULL", "0") == "1"
+STEPS = int(os.environ.get("BENCH_STEPS", "60" if FULL else "30"))
+SFT_STEPS = int(os.environ.get("BENCH_SFT_STEPS", "400" if FULL else "250"))
+
+TINY = ModelConfig(name="bench-lm", family="dense", num_layers=2,
+                   d_model=96, num_heads=4, num_kv_heads=2, d_ff=192,
+                   vocab_size=32, block_pattern=(ATTN,),
+                   ffn_pattern=(MLP,), dtype="float32", attn_impl="naive",
+                   remat=False, rope_theta=1e4)
+
+
+def task_and_tok(seed=0):
+    return (ArithmeticTask(max_operand=20, ops="+", prompt_width=6,
+                           seed=seed), Tokenizer())
+
+
+@functools.lru_cache(maxsize=2)
+def warm_start(seed: int = 0):
+    """Shared SFT warm start (paper RL-tunes a pretrained model)."""
+    task, tok = task_and_tok(seed)
+    tc = TrainConfig(learning_rate=1e-2, total_steps=SFT_STEPS)
+    state = init_state(TINY, tc, init_params(TINY, jax.random.PRNGKey(seed)))
+    state, loss = sft_warmstart(TINY, tc, task, tok, state,
+                                steps=SFT_STEPS, batch=64, seed=seed)
+    return state, float(loss)
+
+
+def run_method(loss_type: str, *, mode: str = "online",
+               max_delay: int = 64, delay_median_s: float = 600.0,
+               delay_dist: str = "lognormal", beta_kl: Optional[float] = None,
+               group_size: int = 8, temperature: float = 1.0,
+               top_k: int = 0, top_p: float = 1.0, adv_normalize: bool = True,
+               gepo_smooth: float = 0.0, steps: Optional[int] = None,
+               seed: int = 0, num_samplers: int = 2,
+               prompts_per_batch: int = 8, lr: float = 1e-3) -> Dict:
+    """One training run; returns the paper's summary stats + history."""
+    steps = steps or STEPS
+    jax.clear_caches()                  # bound executable memory on 1 core
+    state0, _ = warm_start(seed)
+    state = TrainState(params=state0.params, opt=state0.opt,
+                       step=jnp.zeros((), jnp.int32))
+    beta = beta_kl if beta_kl is not None else (
+        0.0 if mode == "online" else 0.005)            # paper §4.1
+    rl = RLConfig(loss_type=loss_type, group_size=group_size, beta_kl=beta,
+                  max_new_tokens=6, temperature=temperature, top_k=top_k,
+                  top_p=top_p, adv_normalize=adv_normalize,
+                  gepo_smooth=gepo_smooth)
+    tc = TrainConfig(learning_rate=lr, total_steps=steps)
+    task, tok = task_and_tok(seed)
+    eval_fn = make_eval_fn(TINY, rl, task, tok, n_prompts=24)
+    eval_every = max(steps // 6, 2)
+
+    if mode == "online":
+        hist, evals, learner = run_online(
+            TINY, rl, tc, task, tok, state, num_steps=steps,
+            prompts_per_batch=prompts_per_batch, seed=seed,
+            eval_fn=eval_fn, eval_every=eval_every)
+    else:
+        hcfg = HeteroConfig(num_samplers=num_samplers,
+                            max_delay_steps=max_delay,
+                            delay_distribution=delay_dist,
+                            delay_median_s=delay_median_s, seed=seed)
+        rt = HeteroRuntime(TINY, rl, tc, hcfg, task, tok, state,
+                           prompts_per_batch=prompts_per_batch,
+                           eval_fn=eval_fn, eval_every=eval_every)
+        hist = rt.run(steps)
+        evals = rt.eval_scores
+        learner = rt.learner
+
+    best, last, gap = best_last_gap(evals)
+    return {
+        "loss_type": loss_type, "mode": mode,
+        "eval_best": best, "eval_last": last, "gap": gap,
+        "reward_last10": float(np.mean(hist.get("reward_mean")[-10:])),
+        "iw_var_mean": float(np.nanmean(hist.get("iw_var"))),
+        "iw_var_max": float(np.nanmax(hist.get("iw_var"))),
+        "kl_mean": float(np.nanmean(hist.get("kl"))),
+        "grad_norm_std": float(np.nanstd(hist.get("grad_norm"))),
+        "est_error_mean": float(np.nanmean(hist.get("est_error"))),
+        "staleness_mean": float(np.nanmean(hist.get("staleness"))),
+        "history": hist,
+    }
+
+
+def csv_row(name: str, rec: Dict, keys: List[str]) -> str:
+    return ",".join([name] + [f"{rec[k]:.4f}" if isinstance(rec[k], float)
+                              else str(rec[k]) for k in keys])

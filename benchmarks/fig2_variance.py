@@ -1,0 +1,37 @@
+"""Fig. 2: Var[p/q] vs Var[p/Ê_q[q]] under Bernoulli and Gaussian
+parameter grids — analytic, validates the paper's variance-reduction
+geometry (GEIW wins in the high-KL regime; a small region where it
+loses is expected and reported)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import theory
+
+
+def run() -> list:
+    rows = ["fig2,setting,frac_gepo_wins,max_gap_highkl,min_gap_lowkl"]
+    # Bernoulli grid
+    grid = np.linspace(0.05, 0.95, 19)
+    wins, gaps_hi, gaps_lo = [], [], []
+    for a in grid:
+        for b in grid:
+            v_std, v_new = theory.bernoulli_vars(a, b)
+            kl = theory.kl(np.array([1 - a, a]), np.array([1 - b, b]))
+            gap = v_std - v_new
+            wins.append(gap > 0)
+            (gaps_hi if kl > 1.0 else gaps_lo).append(gap)
+    rows.append(f"fig2,bernoulli,{np.mean(wins):.4f},"
+                f"{max(gaps_hi):.4g},{min(gaps_lo):.4g}")
+    assert all(g > 0 for g in gaps_hi), "GEIW must win in every high-KL cell"
+
+    # Gaussian grid
+    wins, gaps_hi, gaps_lo = [], [], []
+    for d in np.linspace(0.1, 4.0, 16):
+        v_std, v_new, kl = theory.gaussian_vars(0.0, d)
+        gap = v_std - v_new
+        wins.append(gap > 0)
+        (gaps_hi if kl > 1.0 else gaps_lo).append(gap)
+    rows.append(f"fig2,gaussian,{np.mean(wins):.4f},"
+                f"{max(gaps_hi):.4g},{min(gaps_lo):.4g}")
+    return rows

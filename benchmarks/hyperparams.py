@@ -1,0 +1,49 @@
+"""Tables 5–10: hyperparameter sensitivity (reduced sweeps).
+
+Hetero-RL axes: group size, β_KL, delay distribution.
+Online-RL axes: temperature, top-p, top-k.
+"""
+from __future__ import annotations
+
+from benchmarks.common import csv_row, run_method
+
+KEYS = ("eval_best", "eval_last", "gap", "iw_var_mean")
+
+
+def run() -> list:
+    rows = ["hyperparams,setting," + ",".join(KEYS)]
+
+    # Table 5: group size (hetero)
+    for g in (2, 4, 8):
+        rec = run_method("gepo", mode="hetero", group_size=g,
+                         delay_median_s=900.0)
+        rows.append(csv_row(f"table5_group_size,g={g}", rec, list(KEYS)))
+
+    # Table 6: beta_KL (hetero)
+    for beta in (0.001, 0.005, 0.01):
+        rec = run_method("gepo", mode="hetero", beta_kl=beta,
+                         delay_median_s=900.0)
+        rows.append(csv_row(f"table6_beta_kl,beta={beta}", rec, list(KEYS)))
+
+    # Table 7: delay distribution (hetero)
+    for dist in ("lognormal", "weibull", "exponential"):
+        rec = run_method("gepo", mode="hetero", delay_dist=dist,
+                         delay_median_s=900.0)
+        rows.append(csv_row(f"table7_delay_dist,{dist}", rec, list(KEYS)))
+
+    # Table 9: temperature (online)
+    for t in (0.4, 1.0):
+        rec = run_method("gepo", mode="online", temperature=t)
+        rows.append(csv_row(f"table9_temperature,T={t}", rec, list(KEYS)))
+
+    # Table 8: top-p (online)
+    for p in (0.9, 1.0):
+        rec = run_method("gepo", mode="online", top_p=p)
+        rows.append(csv_row(f"table8_top_p,p={p}", rec, list(KEYS)))
+
+    # Table 10: top-k (online)
+    for k in (10, 0):
+        rec = run_method("gepo", mode="online", top_k=k)
+        rows.append(csv_row(f"table10_top_k,k={k or 'off'}", rec,
+                            list(KEYS)))
+    return rows

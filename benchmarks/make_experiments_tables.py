@@ -1,0 +1,73 @@
+"""Generate the EXPERIMENTS.md §Dry-run/§Roofline tables from the dry-run
+JSON records (baseline + __opt)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def load(results="results/dryrun"):
+    recs = {}
+    for fn in glob.glob(os.path.join(results, "*.json")):
+        key = os.path.basename(fn)[:-5]
+        with open(fn) as f:
+            recs[key] = json.load(f)
+    return recs
+
+
+def fmt_s(x):
+    return f"{x*1e3:9.1f}" if x < 1000 else f"{x*1e3:9.3g}"
+
+
+def roofline_table(recs, opt=False):
+    rows = ["| arch | shape | mesh | compute ms | memory ms | collective ms"
+            " | bottleneck | useful | args GiB | temp GiB | fit |",
+            "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for key in sorted(recs):
+        if key.endswith("__opt") != opt:
+            continue
+        r = recs[key]
+        t = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {t['compute_s']*1e3:.1f} | {t['memory_s']*1e3:.1f} "
+            f"| {t['collective_s']*1e3:.1f} | {t['bottleneck']} "
+            f"| {(r.get('useful_flops_frac') or 0):.2f} "
+            f"| {r.get('entry_arg_bytes_per_dev', 0)/2**30:.2f} "
+            f"| {r['memory_analysis'].get('temp_size_in_bytes', 0)/2**30:.1f} "
+            f"| {'✓' if r.get('hbm_fit_16g') else '✗'} |")
+    return "\n".join(rows)
+
+
+def compare_table(recs):
+    rows = ["| arch × shape (16x16) | baseline coll GB | optimized coll GB "
+            "| × | baseline temp GiB | optimized temp GiB | bottleneck "
+            "base→opt |", "|---|---|---|---|---|---|---|"]
+    for key in sorted(recs):
+        if key.endswith("__opt") or "2x16x16" in key:
+            continue
+        opt = recs.get(key + "__opt")
+        if opt is None:
+            continue
+        b = recs[key]
+        cb = b["collective_bytes_per_dev"] / 1e9
+        co = opt["collective_bytes_per_dev"] / 1e9
+        tb = b["memory_analysis"].get("temp_size_in_bytes", 0) / 2**30
+        to = opt["memory_analysis"].get("temp_size_in_bytes", 0) / 2**30
+        rows.append(f"| {b['arch']} × {b['shape']} | {cb:.1f} | {co:.1f} "
+                    f"| {cb/max(co,1e-9):.1f}× | {tb:.1f} | {to:.1f} "
+                    f"| {b['roofline']['bottleneck']}→"
+                    f"{opt['roofline']['bottleneck']} |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    recs = load(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun")
+    print("## baseline\n")
+    print(roofline_table(recs, opt=False))
+    print("\n## optimized\n")
+    print(roofline_table(recs, opt=True))
+    print("\n## comparison\n")
+    print(compare_table(recs))

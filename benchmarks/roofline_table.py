@@ -1,0 +1,34 @@
+"""Deliverable (g): aggregate the dry-run JSON records into the roofline
+table (per arch × shape × mesh: three terms, bottleneck, useful-FLOPs
+fraction, HBM fit)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.environ.get("DRYRUN_RESULTS", "results/dryrun")
+
+
+def run() -> list:
+    files = sorted(glob.glob(os.path.join(RESULTS, "*.json")))
+    rows = ["roofline,arch,shape,mesh,compute_ms,memory_ms,collective_ms,"
+            "bottleneck,useful_flops_frac,args_GiB,temp_GiB,fit16G"]
+    if not files:
+        rows.append("roofline,NO_RESULTS,run `python -m repro.launch."
+                    "dryrun` first,,,,,,,,,")
+        return rows
+    for fn in files:
+        with open(fn) as f:
+            r = json.load(f)
+        t = r["roofline"]
+        ma = r.get("memory_analysis", {})
+        rows.append(
+            f"roofline,{r['arch']},{r['shape']},{r['mesh']},"
+            f"{t['compute_s']*1e3:.2f},{t['memory_s']*1e3:.2f},"
+            f"{t['collective_s']*1e3:.2f},{t['bottleneck']},"
+            f"{(r.get('useful_flops_frac') or 0):.3f},"
+            f"{r.get('entry_arg_bytes_per_dev', 0)/2**30:.2f},"
+            f"{ma.get('temp_size_in_bytes', 0)/2**30:.2f},"
+            f"{r.get('hbm_fit_16g')}")
+    return rows

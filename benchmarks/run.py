@@ -1,0 +1,62 @@
+"""Benchmark harness entrypoint: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig2,table1,...]
+
+Budget knobs: BENCH_STEPS (default 30), BENCH_FULL=1 for paper-scale runs.
+Output: CSV rows `table,setting,metrics...` on stdout.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+MODULES = [
+    ("fig2", "benchmarks.fig2_variance"),
+    ("theory", "benchmarks.theory_bounds"),
+    ("table14", "benchmarks.table14_localized"),
+    ("roofline", "benchmarks.roofline_table"),
+    ("table1", "benchmarks.table1_online"),
+    ("table2", "benchmarks.table2_hetero"),
+    ("fig5", "benchmarks.fig5_latency"),
+    ("table12", "benchmarks.table12_async"),
+    ("table13", "benchmarks.table13_ablation"),
+    ("hyperparams", "benchmarks.hyperparams"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of benchmark names")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    t0 = time.time()
+    failures = []
+    for name, mod_name in MODULES:
+        if only and name not in only:
+            continue
+        t1 = time.time()
+        try:
+            import importlib
+
+            import jax
+            jax.clear_caches()          # executables from prior modules
+            mod = importlib.import_module(mod_name)
+            rows = mod.run()
+            for r in rows:
+                print(r, flush=True)
+            print(f"# {name} done in {time.time()-t1:.1f}s", flush=True)
+        except Exception:
+            failures.append(name)
+            print(f"# {name} FAILED:", flush=True)
+            traceback.print_exc()
+    print(f"# total {time.time()-t0:.1f}s; failures: {failures or 'none'}",
+          flush=True)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

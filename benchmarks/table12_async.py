@@ -1,0 +1,25 @@
+"""Table 12 / App. C: asynchronous off-policy baselines — Truncated-IS
+(IMPALA), CISPO, TOPR (± KL) vs GEPO under delay."""
+from __future__ import annotations
+
+from benchmarks.common import csv_row, run_method
+
+KEYS = ("eval_best", "eval_last", "gap", "iw_var_mean", "kl_mean")
+
+
+def run() -> list:
+    rows = ["table12_async,method," + ",".join(KEYS)]
+    settings = [
+        ("tis+kl", dict(loss_type="tis", beta_kl=0.005)),
+        ("topr_wo_kl", dict(loss_type="topr", beta_kl=0.0)),
+        ("topr+kl", dict(loss_type="topr", beta_kl=0.005)),
+        ("cispo_wo_kl", dict(loss_type="cispo", beta_kl=0.0)),
+        ("cispo+kl", dict(loss_type="cispo", beta_kl=0.005)),
+        ("gepo", dict(loss_type="gepo", beta_kl=0.005)),
+    ]
+    for name, kw in settings:
+        lt = kw.pop("loss_type")
+        rec = run_method(lt, mode="hetero", max_delay=64,
+                         delay_median_s=900.0, **kw)
+        rows.append(csv_row(f"table12_async,{name}", rec, list(KEYS)))
+    return rows

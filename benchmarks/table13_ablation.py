@@ -1,0 +1,27 @@
+"""Table 13 / App. D: importance-weight granularity ablation
+(token → sequence → group) plus advantage-normalization ablation and the
+App.-H defensive-denominator variant (beyond-paper)."""
+from __future__ import annotations
+
+from benchmarks.common import csv_row, run_method
+
+KEYS = ("eval_best", "eval_last", "gap", "iw_var_mean", "iw_var_max")
+
+
+def run() -> list:
+    rows = ["table13_ablation,variant," + ",".join(KEYS)]
+    settings = [
+        ("token-lv(grpo-iw)", dict(loss_type="grpo")),
+        ("seq-lv(gspo-iw)", dict(loss_type="gspo")),
+        ("group-lv(gepo)", dict(loss_type="gepo")),
+        ("gepo_wo_adv_norm", dict(loss_type="gepo", adv_normalize=False)),
+        ("gepo_smooth_0.2", dict(loss_type="gepo", gepo_smooth=0.2)),
+    ]
+    recs = {}
+    for name, kw in settings:
+        lt = kw.pop("loss_type")
+        recs[name] = run_method(lt, mode="hetero", max_delay=64,
+                                delay_median_s=900.0, **kw)
+        rows.append(csv_row(f"table13_ablation,{name}", recs[name],
+                            list(KEYS)))
+    return rows

@@ -1,0 +1,15 @@
+"""Batched serving with the KV-cache engine — what a HeteroRL sampler node
+runs. Uses a reduced Qwen2-family config; full-size serving paths are
+exercised shape-exactly by the dry-run.
+
+    PYTHONPATH=src python examples/serve_batch.py --arch qwen2-7b
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0]] + (sys.argv[1:] or
+                                ["--arch", "qwen2-7b", "--batch", "8",
+                                 "--max-new", "12", "--rounds", "2"])
+    main()

@@ -1,0 +1,8 @@
+"""HeteroRL / GEPO - heterogeneous asynchronous RL for LLM post-training,
+reproduced as a production-grade JAX framework.
+
+Paper: "GEPO: Group Expectation Policy Optimization for Stable
+Heterogeneous Reinforcement Learning" (Zhang, Zheng et al., 2025).
+"""
+
+__version__ = "0.1.0"

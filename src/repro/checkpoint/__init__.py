@@ -1,0 +1,3 @@
+from repro.checkpoint.store import PolicyStore, load_pytree, save_pytree
+
+__all__ = ["PolicyStore", "save_pytree", "load_pytree"]

@@ -1,0 +1,76 @@
+"""Checkpointing: pytree ⇄ npz bytes, plus the versioned policy store that
+plays the role of App. E's ``Model_Sync_Path`` (learner publishes, samplers
+pull the latest version after their simulated transmission delay)."""
+from __future__ import annotations
+
+import io
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree: Any) -> List[Tuple[str, np.ndarray]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(p.key) if hasattr(p, "key") else str(p.idx)
+                       if hasattr(p, "idx") else str(p) for p in path)
+        out.append((key, np.asarray(leaf)))
+    return out
+
+
+def save_pytree(tree: Any) -> bytes:
+    buf = io.BytesIO()
+    arrays = dict(_flatten_with_paths(tree))
+    np.savez(buf, **arrays)
+    return buf.getvalue()
+
+
+def load_pytree(data: bytes, like: Any) -> Any:
+    """Restore into the structure of ``like`` (paths must match)."""
+    buf = io.BytesIO(data)
+    with np.load(buf) as z:
+        arrays = {k: z[k] for k in z.files}
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path, leaf in flat:
+        key = "/".join(str(p.key) if hasattr(p, "key") else str(p.idx)
+                       if hasattr(p, "idx") else str(p) for p in path)
+        arr = arrays[key]
+        leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class PolicyStore:
+    """Versioned checkpoint store (thread-safe for the threaded runtime).
+
+    The learner ``publish``es (version, bytes); samplers ``fetch`` the
+    newest version. Old versions are pruned beyond ``keep``.
+    """
+
+    def __init__(self, keep: int = 8) -> None:
+        self._lock = threading.Lock()
+        self._store: Dict[int, bytes] = {}
+        self._latest = -1
+        self._keep = keep
+        self.bytes_published = 0
+
+    def publish(self, version: int, data: bytes) -> None:
+        with self._lock:
+            self._store[version] = data
+            self._latest = max(self._latest, version)
+            self.bytes_published += len(data)
+            stale = sorted(self._store)[:-self._keep]
+            for v in stale:
+                del self._store[v]
+
+    def latest_version(self) -> int:
+        with self._lock:
+            return self._latest
+
+    def fetch(self, version: Optional[int] = None) -> Tuple[int, bytes]:
+        with self._lock:
+            v = self._latest if version is None else version
+            return v, self._store[v]

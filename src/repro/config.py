@@ -1,0 +1,271 @@
+"""Configuration system for the HeteroRL/GEPO framework.
+
+Everything is a frozen dataclass so configs are hashable and usable as jit
+static arguments. `ModelConfig` describes any of the supported architecture
+families via a per-layer *block pattern* that is cycled over the depth; the
+model code scans over homogeneous super-blocks of one pattern period.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+# Layer kinds usable in ``block_pattern``.
+ATTN = "attn"          # global causal self-attention
+LOCAL = "local"        # sliding-window causal self-attention
+MAMBA = "mamba"        # Mamba2 / SSD block (attention-free)
+CROSS = "cross"        # cross-attention to a stub modality memory (VLM)
+
+# FFN kinds usable in ``ffn_pattern``.
+MLP = "mlp"
+MOE = "moe"
+NONE = "none"          # e.g. Mamba2 blocks carry no separate FFN
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                     # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0               # 0 -> d_model // num_heads
+
+    # layer layout -------------------------------------------------------
+    block_pattern: Tuple[str, ...] = (ATTN,)
+    ffn_pattern: Tuple[str, ...] = (MLP,)
+
+    # attention options ---------------------------------------------------
+    qkv_bias: bool = False
+    sliding_window: int = 4096      # used by LOCAL layers
+    attn_softcap: Optional[float] = None
+    final_softcap: Optional[float] = None
+    rope_theta: float = 1_000_000.0
+
+    # MoE options ---------------------------------------------------------
+    num_experts: int = 0
+    experts_per_token: int = 0
+    shared_expert: bool = False
+    capacity_factor: float = 1.25
+
+    # SSM (Mamba2 / SSD) options -----------------------------------------
+    ssm_state: int = 0              # N, state dimension
+    ssm_headdim: int = 64           # P, channels per SSM head
+    ssm_expand: int = 2             # d_inner = expand * d_model
+    ssm_ngroups: int = 1            # B/C groups
+    ssm_conv: int = 4               # depthwise conv width
+    ssm_chunk: int = 256            # SSD chunk length
+
+    # encoder / multimodal stubs -----------------------------------------
+    encoder_layers: int = 0         # >0 -> encoder-decoder (whisper)
+    encoder_seq: int = 0            # frames for audio / patches for vision
+    memory_seq: int = 0             # stub modality memory length for CROSS
+
+    # numerics ------------------------------------------------------------
+    norm_eps: float = 1e-6
+    dtype: str = "bfloat16"
+    tie_embeddings: bool = False
+    scale_embed: bool = False       # multiply embeddings by sqrt(d) (gemma)
+
+    # implementation knobs (not architecture) -----------------------------
+    attn_impl: str = "chunked"      # naive | chunked  (pure-jnp paths)
+    attn_chunk: int = 512           # query/kv block for chunked attention
+    remat: bool = True              # activation checkpointing per block
+    # residual-stream sharding constraint between blocks (set by the
+    # launcher; nested tuples of mesh axis names / None). E.g. Megatron-SP
+    # style ((("pod","data"),), "model", None) shards (B, S, d) as
+    # batch->dp, seq->model.
+    act_sharding: Optional[Tuple] = None
+    # §Perf H-A1 (REFUTED for dense-train: 3.3× more collective bytes —
+    # see EXPERIMENTS.md): force head-sharded full-S q/k/v before attention.
+    attn_gather_qkv: bool = False
+    # §Perf H-B2/H-C3: shard_map expert-parallel MoE ("train"|"serve",
+    # None = GSPMD baseline); ep_dp_axes = data axes of the mesh.
+    moe_ep: Optional[str] = None
+    ep_dp_axes: Optional[Tuple[str, ...]] = None
+    # §Perf H-G1: ring-buffer KV cache for LOCAL (sliding-window) layers —
+    # the cache stores only `sliding_window` entries (gemma2 long-context
+    # decode: local-layer KV shrinks seq_len/window ≈ 128×).
+    local_ring_kv: bool = False
+
+    # ---------------------------------------------------------------------
+    def __post_init__(self):
+        if self.head_dim == 0 and self.num_heads > 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        period = len(self.block_pattern)
+        assert self.num_layers % period == 0, (
+            f"{self.name}: num_layers={self.num_layers} not divisible by "
+            f"pattern period {period}")
+
+    # derived -------------------------------------------------------------
+    @property
+    def period(self) -> int:
+        return len(self.block_pattern)
+
+    @property
+    def num_blocks(self) -> int:
+        """Number of scanned super-blocks (one pattern period each)."""
+        return self.num_layers // self.period
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded so it shards evenly over 16-way model parallelism
+        and stays lane-aligned (multiples of 256)."""
+        return _round_up(self.vocab_size, 256)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_headdim if self.ssm_state else 0
+
+    def ffn_kind(self, layer_in_block: int) -> str:
+        return self.ffn_pattern[layer_in_block % len(self.ffn_pattern)]
+
+    @property
+    def has_attention(self) -> bool:
+        return any(k in (ATTN, LOCAL, CROSS) for k in self.block_pattern)
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+    # parameter counting (for roofline MODEL_FLOPS = 6·N·D) ---------------
+    def param_count(self, active_only: bool = False) -> int:
+        """Approximate parameter count; ``active_only`` counts only the
+        experts that fire per token (for MoE rooflines)."""
+        d, h = self.d_model, self.head_dim
+        n_q, n_kv = self.num_heads, self.num_kv_heads
+        total = self.padded_vocab * d          # embedding
+        if not self.tie_embeddings:
+            total += self.padded_vocab * d     # lm head
+        for li in range(self.num_layers):
+            kind = self.block_pattern[li % self.period]
+            if kind in (ATTN, LOCAL, CROSS):
+                total += d * (n_q * h) + 2 * d * (n_kv * h) + (n_q * h) * d
+            elif kind == MAMBA:
+                di, N, G = self.d_inner, self.ssm_state, self.ssm_ngroups
+                total += d * (2 * di + 2 * G * N + self.ssm_heads)  # in_proj
+                total += di * d                                      # out_proj
+                total += self.ssm_conv * (di + 2 * G * N)            # conv
+            fk = self.ffn_kind(li % self.period)
+            if fk == MLP:
+                total += 3 * d * self.d_ff
+            elif fk == MOE:
+                n_e = (self.experts_per_token if active_only
+                       else self.num_experts)
+                total += 3 * d * self.d_ff * n_e
+                total += d * self.num_experts                        # router
+                if self.shared_expert:
+                    total += 3 * d * self.d_ff
+            total += 2 * d                                            # norms
+        if self.encoder_layers:
+            total += self.encoder_layers * (4 * d * (self.num_heads * h)
+                                            + 3 * d * self.d_ff + 2 * d)
+        return total
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One of the assigned input shapes."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # train | prefill | decode
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4_096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32_768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524_288, 1, "decode")
+INPUT_SHAPES = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+SHAPES_BY_NAME = {s.name: s for s in INPUT_SHAPES}
+
+
+@dataclass(frozen=True)
+class RLConfig:
+    """Policy-optimization settings (paper §3/§4 + App. B)."""
+    loss_type: str = "gepo"        # grpo|dr_grpo|bnpo|gspo|gepo|tis|cispo|topr
+    group_size: int = 8
+    clip_eps: float = 0.2          # PPO-style clip (token/seq level methods)
+    cispo_eps_low: float = 1.0     # IW clip band for CISPO
+    cispo_eps_high: float = 0.27
+    beta_kl: float = 0.005         # CPPO-KL coefficient (0 => off)
+    adv_normalize: bool = True     # divide by group std (off for dr_grpo)
+    seq_len_normalize: bool = True # length-norm of seq logprob (GSPO eq. 61)
+    gepo_smooth: float = 0.0       # App. H defensive denominator: λ·p mix
+    temperature: float = 0.6
+    top_k: int = 20
+    top_p: float = 0.95
+    max_new_tokens: int = 32
+    recompute_sampler_logps: bool = True   # App. B.1 vLLM/FSDP mismatch fix
+    entropy_bonus: float = 0.0
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 1e-6
+    warmup_frac: float = 0.03
+    total_steps: int = 1000
+    weight_decay: float = 0.0
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    grad_accum: int = 1
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class HeteroConfig:
+    """HeteroRL runtime settings (paper §4.1 + App. E)."""
+    num_samplers: int = 4
+    max_delay_steps: int = 64        # staleness window in learner steps
+    delay_distribution: str = "lognormal"   # lognormal | weibull | exponential
+    delay_min_s: float = 60.0
+    delay_max_s: float = 1800.0
+    delay_median_s: float = 60.0
+    sync_interval_steps: int = 1     # learner checkpoint publish period
+    window_s: float = 1800.0         # rollout eligibility window
+    seed: int = 0
+
+
+def smoke_variant(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """A reduced same-family variant for CPU smoke tests: ≤2 pattern periods
+    of layers, d_model ≤ 256, ≤ 4 experts."""
+    period = cfg.period
+    small = dict(
+        num_layers=2 * period if 2 * period <= 4 else period,
+        d_model=256 if cfg.d_model >= 256 else cfg.d_model,
+        num_heads=min(cfg.num_heads, 4) if cfg.num_heads else 0,
+        num_kv_heads=min(cfg.num_kv_heads, 2) if cfg.num_kv_heads else 0,
+        head_dim=64 if cfg.num_heads else 0,
+        d_ff=512 if cfg.d_ff else 0,
+        vocab_size=512,
+        num_experts=min(cfg.num_experts, 4),
+        experts_per_token=min(cfg.experts_per_token, 2),
+        encoder_layers=2 if cfg.encoder_layers else 0,
+        encoder_seq=32 if cfg.encoder_seq else 0,
+        memory_seq=16 if cfg.memory_seq else 0,
+        ssm_state=min(cfg.ssm_state, 32) if cfg.ssm_state else 0,
+        ssm_headdim=32 if cfg.ssm_state else cfg.ssm_headdim,
+        ssm_chunk=16 if cfg.ssm_state else cfg.ssm_chunk,
+        sliding_window=min(cfg.sliding_window, 64),
+        attn_impl="naive",
+        attn_chunk=32,
+        dtype="float32",
+        remat=False,
+        name=cfg.name + "-smoke",
+    )
+    small.update(overrides)
+    return dataclasses.replace(cfg, **small)

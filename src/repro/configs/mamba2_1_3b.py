@@ -1,0 +1,22 @@
+"""Mamba2-1.3B [ssm] — 48L d_model=2048, attention-free (SSD, state-space
+duality), no FFN (d_ff=0), vocab=50280, ssm_state=128. [arXiv:2405.21060]"""
+from repro.config import ModelConfig, MAMBA, NONE
+
+CONFIG = ModelConfig(
+    name="mamba2-1.3b",
+    family="ssm",
+    num_layers=48,
+    d_model=2048,
+    num_heads=0,
+    num_kv_heads=0,
+    head_dim=0,
+    d_ff=0,
+    vocab_size=50280,
+    block_pattern=(MAMBA,),
+    ffn_pattern=(NONE,),
+    ssm_state=128,
+    ssm_headdim=64,
+    ssm_expand=2,
+    ssm_ngroups=1,
+    tie_embeddings=True,
+)

@@ -1,0 +1,12 @@
+"""The paper's algorithmic core: importance weights (token / sequence /
+group level), group-relative advantages, loss assembly for every method,
+stability diagnostics and the analytic theory of Theorems 1-3."""
+from repro.core.advantage import group_advantages
+from repro.core.importance import (ALL_METHODS, importance_weights,
+                                   group_expectation_log_denominator,
+                                   seq_logprob)
+from repro.core.loss import kl_k3, policy_loss
+
+__all__ = ["group_advantages", "importance_weights", "policy_loss",
+           "kl_k3", "seq_logprob", "ALL_METHODS",
+           "group_expectation_log_denominator"]

@@ -1,0 +1,35 @@
+"""Group-relative advantage estimation.
+
+Baseline b(x) is the within-group mean reward (GRPO, §2). Variants:
+
+- ``grpo``/``gspo``/``gepo``: A = (r − mean) [/ std if ``normalize``]
+- ``dr_grpo``: no std normalization (Liu et al. 2025 debiasing)
+- ``bnpo``:    Beta-normalization — for (near-)binary rewards the batch
+               success rate ρ parameterizes Beta(α̂, β̂); A = (r−ρ)/√(ρ(1−ρ))
+
+Per App. F (localized reward computation) these statistics are computed
+*per group*, never via a cross-process all-gather — the HeteroRL runtime
+guarantees each group is generated and scored on one node.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def group_advantages(rewards: jax.Array, group_size: int, *,
+                     normalize: bool = True, kind: str = "grpo",
+                     eps: float = 1e-6) -> jax.Array:
+    """rewards (B,) with group-contiguous layout -> advantages (B,)."""
+    b = rewards.shape[0]
+    g = group_size
+    r = rewards.reshape(b // g, g)
+    if kind == "bnpo":
+        rho = jnp.clip(r.mean(), eps, 1.0 - eps)     # batch success rate
+        a = (r - rho) / jnp.sqrt(rho * (1.0 - rho))
+        return a.reshape(b)
+    mean = r.mean(axis=-1, keepdims=True)
+    a = r - mean
+    if normalize and kind != "dr_grpo":
+        a = a / (r.std(axis=-1, keepdims=True) + eps)
+    return a.reshape(b)

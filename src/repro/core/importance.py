@@ -1,0 +1,96 @@
+"""Importance-weight computation — the heart of the paper (Listing 1 +
+Table 11). All quantities are computed in log-space for stability.
+
+Token level  (GRPO / Dr.GRPO / BNPO):   w_t = p_t / q_t
+Sequence lvl (GSPO):                    w   = p(y|x) / q(y|x)
+Group level  (GEPO, ours):              w   = p(y|x) / Ê_q[q(y|x)]
+  with  Ê_q[q] = Σ_i q(y_i|x)^2 / Σ_i q(y_i|x)   over the G responses of
+  the group (eq. 2), denominator stop-gradiented (it is sampler-side).
+
+Sequence probabilities are length-normalized (eq. 61, GSPO convention):
+log p(y|x) = (Σ_t log p_t · m_t) / Σ_t m_t.
+
+Async baselines (App. C, Table 11): Truncated-IS (IMPALA), CISPO, TOPR —
+these reshape a *stop-gradiented* weight onto a REINFORCE term and are
+assembled in ``repro.core.loss``.
+
+Batch layout: sequences of one group are contiguous — shape (n_groups * G,
+T). The defensive smoothed denominator of App. H ("future work") is
+implemented behind ``gepo_smooth`` (λ=0 recovers the paper).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+TOKEN_LEVEL = ("grpo", "dr_grpo", "bnpo")
+SEQ_LEVEL = ("gspo", "tis", "topr")
+GROUP_LEVEL = ("gepo",)
+RATIO_METHODS = TOKEN_LEVEL + ("gspo", "gepo")
+ASYNC_METHODS = ("tis", "cispo", "topr")
+ALL_METHODS = TOKEN_LEVEL + ("gspo", "gepo") + ASYNC_METHODS
+
+
+def seq_logprob(token_lp: jax.Array, mask: jax.Array,
+                length_normalize: bool = True) -> jax.Array:
+    """(B, T) token log-probs -> (B,) sequence log-prob."""
+    s = (token_lp * mask).sum(-1)
+    if length_normalize:
+        s = s / jnp.maximum(mask.sum(-1), 1.0)
+    return s
+
+
+def group_expectation_log_denominator(sampler_seq_lp: jax.Array,
+                                      group_size: int,
+                                      smooth: float = 0.0,
+                                      learner_seq_lp: jax.Array | None = None
+                                      ) -> jax.Array:
+    """log Ê_q[q] per sequence (eq. 2), broadcast back to (B,).
+
+    Ê_q[q] = Σ q_i² / Σ q_i  computed per group in log space:
+        log Ê_q[q] = logsumexp(2·log q) − logsumexp(log q).
+
+    ``smooth`` λ>0 enables the App.-H defensive denominator
+    (1−λ)·Ê_q[q] + λ·p(y|x)  (p detached).
+    """
+    b = sampler_seq_lp.shape[0]
+    g = group_size
+    lp = sampler_seq_lp.reshape(b // g, g)
+    log_den = (jax.nn.logsumexp(2.0 * lp, axis=-1)
+               - jax.nn.logsumexp(lp, axis=-1))            # (n_groups,)
+    log_den = jnp.repeat(log_den, g)
+    if smooth > 0.0:
+        assert learner_seq_lp is not None
+        log_den = jnp.logaddexp(
+            jnp.log1p(-smooth) + log_den,
+            jnp.log(smooth) + jax.lax.stop_gradient(learner_seq_lp))
+    return log_den
+
+
+def importance_weights(loss_type: str,
+                       learner_lp: jax.Array,
+                       sampler_lp: jax.Array,
+                       mask: jax.Array,
+                       *,
+                       group_size: int,
+                       length_normalize: bool = True,
+                       gepo_smooth: float = 0.0,
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Returns ``(log_w, level)`` where ``log_w`` is (B, T) for token-level
+    methods and (B,) for sequence/group-level ones. Gradients flow through
+    the learner log-probs only (sampler side is data)."""
+    sampler_lp = jax.lax.stop_gradient(sampler_lp)
+    if loss_type in TOKEN_LEVEL or loss_type == "cispo":
+        return learner_lp - sampler_lp, "token"
+
+    p_seq = seq_logprob(learner_lp, mask, length_normalize)
+    q_seq = seq_logprob(sampler_lp, mask, length_normalize)
+    if loss_type in ("gspo", "tis", "topr"):
+        return p_seq - q_seq, "seq"
+    if loss_type == "gepo":
+        log_den = group_expectation_log_denominator(
+            q_seq, group_size, smooth=gepo_smooth, learner_seq_lp=p_seq)
+        return p_seq - jax.lax.stop_gradient(log_den), "seq"
+    raise ValueError(f"unknown loss_type {loss_type!r}")

@@ -1,0 +1,41 @@
+"""Sharding-friendly token log-probabilities.
+
+``take_along_axis`` over a vocab-sharded logits tensor makes GSPMD
+all-gather the full vocabulary (tens of GB at RL shapes). The masked-sum
+formulation below keeps every op elementwise/reduction along the sharded
+vocab axis, so the only cross-device traffic is an all-reduce of (B, S)
+scalars. On TPU the ``repro.kernels.fused_logprob`` Pallas kernel computes
+the same quantity without materializing log-softmax at all.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def token_logprob_from_logits(logits: jax.Array, targets: jax.Array
+                              ) -> jax.Array:
+    """logits (B, S, V) [any dtype], targets (B, S) int32 -> (B, S) f32."""
+    lg = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    v = lg.shape[-1]
+    hit = jax.lax.broadcasted_iota(jnp.int32, lg.shape, lg.ndim - 1) \
+        == targets[..., None]
+    tgt = jnp.where(hit, lg, 0.0).sum(axis=-1)
+    return tgt - lse
+
+
+def token_logprob_and_entropy(logits: jax.Array, targets: jax.Array
+                              ) -> Tuple[jax.Array, jax.Array]:
+    lg = logits.astype(jnp.float32)
+    m = lg.max(axis=-1, keepdims=True)
+    p_un = jnp.exp(lg - m)
+    l = p_un.sum(axis=-1)
+    lse = m[..., 0] + jnp.log(l)
+    hit = jax.lax.broadcasted_iota(jnp.int32, lg.shape, lg.ndim - 1) \
+        == targets[..., None]
+    tgt = jnp.where(hit, lg, 0.0).sum(axis=-1)
+    ent = lse - (p_un * lg).sum(-1) / l
+    return tgt - lse, ent

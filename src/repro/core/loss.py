@@ -1,0 +1,143 @@
+"""Policy-optimization loss assembly for every method in the paper.
+
+Ratio family (GRPO / Dr.GRPO / BNPO / GSPO / GEPO):
+    PPO-style clipped surrogate on the (token|seq|group)-level ratio:
+        L = −E[min(w·A, clip(w, 1±ε)·A)]
+    (For GEPO the group-expectation denominator keeps w well-conditioned,
+     so the clip rarely binds — exactly the paper's argument.)
+
+Async family (Table 11):
+    Truncated-IS:  −E[ sg(clip(w, 0, 1)) · A · log p ]        (seq level)
+    CISPO:         −E[ sg(clip(w_t, 1−ε_l, 1+ε_h)) · A · log p_t ]
+    TOPR:          −E[ (1_{A>0} + 1_{A≤0}·sg(clip(w, 0, 1))) · A · log p ]
+
+KL regularization: CPPO-KL (Zhang et al. 2024) against the *sampler*
+policy (no separate reference model — App. B.1), k3 estimator.
+
+Everything returns rich metrics so the stability diagnostics of Fig. 4/5
+(IW variance, KL, estimation error of E[A]) fall out of training for free.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import RLConfig
+from repro.core.importance import (ALL_METHODS, importance_weights,
+                                   seq_logprob)
+
+sg = jax.lax.stop_gradient
+
+
+def _masked_mean(x: jax.Array, mask: jax.Array) -> jax.Array:
+    return (x * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def _per_seq_mean(x: jax.Array, mask: jax.Array) -> jax.Array:
+    """(B,T) -> (B,): mean over valid tokens of each sequence."""
+    return (x * mask).sum(-1) / jnp.maximum(mask.sum(-1), 1.0)
+
+
+def kl_k3(learner_lp: jax.Array, sampler_lp: jax.Array,
+          mask: jax.Array, clamp: float = 20.0) -> jax.Array:
+    """k3 estimator of KL(p‖q) on sampled tokens: E[exp(q−p) − (q−p) − 1].
+
+    Only the exponential term is clamped (±20 nats): with strongly
+    divergent policies exp(q−p) otherwise overflows; clamping the whole
+    log-ratio would zero the gradient exactly when regularization is
+    needed most. The linear term stays live, so at saturation the
+    gradient still pushes p toward q."""
+    d = sg(sampler_lp) - learner_lp
+    d_exp = jnp.clip(d, -clamp, clamp)
+    return _masked_mean(jnp.exp(d_exp) - d - 1.0, mask)
+
+
+def policy_loss(rl: RLConfig,
+                learner_lp: jax.Array,
+                sampler_lp: jax.Array,
+                mask: jax.Array,
+                advantages: jax.Array,
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """learner_lp/sampler_lp/mask: (B,T); advantages: (B,).
+
+    Returns (scalar loss, metrics).
+    """
+    assert rl.loss_type in ALL_METHODS, rl.loss_type
+    log_w, level = importance_weights(
+        rl.loss_type, learner_lp, sampler_lp, mask,
+        group_size=rl.group_size, length_normalize=rl.seq_len_normalize,
+        gepo_smooth=rl.gepo_smooth)
+    adv = sg(advantages)
+
+    if rl.loss_type in ("grpo", "dr_grpo", "bnpo", "gspo", "gepo"):
+        if level == "token":
+            w = jnp.exp(log_w)                              # (B,T)
+            a = adv[:, None]
+            w_clip = jnp.clip(w, 1.0 - rl.clip_eps, 1.0 + rl.clip_eps)
+            per_tok = -jnp.minimum(w * a, w_clip * a)
+            clip_frac = _masked_mean(
+                (jnp.abs(w - 1.0) > rl.clip_eps).astype(jnp.float32), mask)
+            if rl.loss_type == "dr_grpo":
+                # Dr.GRPO: no per-sequence length normalization
+                loss = (per_tok * mask).sum() / (mask.shape[0] * mask.shape[1])
+            else:
+                loss = _per_seq_mean(per_tok, mask).mean()
+            w_seq = jnp.exp(sg(seq_logprob(learner_lp, mask)
+                               - seq_logprob(sampler_lp, mask)))
+        else:                                               # seq / group
+            w = jnp.exp(log_w)                              # (B,)
+            w_clip = jnp.clip(w, 1.0 - rl.clip_eps, 1.0 + rl.clip_eps)
+            loss = -jnp.minimum(w * adv, w_clip * adv).mean()
+            clip_frac = (jnp.abs(sg(w) - 1.0) > rl.clip_eps).mean()
+            w_seq = sg(w)
+    elif rl.loss_type == "tis":
+        w = sg(jnp.clip(jnp.exp(log_w), 0.0, 1.0))          # (B,)
+        reinforce = _per_seq_mean(learner_lp, mask)
+        loss = -(w * adv * reinforce).mean()
+        clip_frac = (jnp.exp(sg(log_w)) > 1.0).astype(jnp.float32).mean()
+        w_seq = sg(jnp.exp(log_w))
+    elif rl.loss_type == "cispo":
+        w_t = sg(jnp.clip(jnp.exp(log_w), 1.0 - rl.cispo_eps_low,
+                          1.0 + rl.cispo_eps_high))         # (B,T)
+        per_tok = -(w_t * adv[:, None] * learner_lp)
+        loss = _per_seq_mean(per_tok, mask).mean()
+        clip_frac = _masked_mean(
+            ((jnp.exp(sg(log_w)) > 1.0 + rl.cispo_eps_high) |
+             (jnp.exp(sg(log_w)) < 1.0 - rl.cispo_eps_low)
+             ).astype(jnp.float32), mask)
+        w_seq = jnp.exp(sg(seq_logprob(learner_lp, mask)
+                           - seq_logprob(sampler_lp, mask)))
+    elif rl.loss_type == "topr":
+        w = sg(jnp.clip(jnp.exp(log_w), 0.0, 1.0))          # (B,)
+        coef = jnp.where(adv > 0, 1.0, w)
+        reinforce = _per_seq_mean(learner_lp, mask)
+        loss = -(coef * adv * reinforce).mean()
+        clip_frac = ((adv <= 0) & (jnp.exp(sg(log_w)) > 1.0)).astype(
+            jnp.float32).mean()
+        w_seq = sg(jnp.exp(log_w))
+    else:
+        raise ValueError(rl.loss_type)
+
+    kl = kl_k3(learner_lp, sampler_lp, mask)
+    if rl.beta_kl > 0.0:
+        loss = loss + rl.beta_kl * kl
+    if rl.entropy_bonus > 0.0:
+        # entropy surrogate on sampled tokens
+        loss = loss - rl.entropy_bonus * _masked_mean(-learner_lp, mask)
+
+    # --- stability diagnostics (Fig. 4/5) --------------------------------
+    est = (w_seq * adv).mean()          # Monte-Carlo E_q[w·A]; E_p[A] ≈ 0
+    metrics = {
+        "loss": sg(loss),
+        "kl": sg(kl),
+        "iw_mean": w_seq.mean(),
+        "iw_var": w_seq.var(),
+        "iw_max": w_seq.max(),
+        "clip_frac": clip_frac,
+        "est_error": jnp.abs(est),      # estimation error of E[A] (Fig. 5c)
+        "adv_mean": adv.mean(),
+        "adv_std": adv.std(),
+    }
+    return loss, metrics

@@ -1,0 +1,7 @@
+from repro.data.pipeline import PromptPipeline, RolloutRequest, score_rollouts
+from repro.data.tasks import (ArithmeticTask, EOS, PAD, BOS, Problem,
+                              Tokenizer, encode_prompts)
+
+__all__ = ["ArithmeticTask", "Tokenizer", "Problem", "encode_prompts",
+           "PromptPipeline", "RolloutRequest", "score_rollouts",
+           "PAD", "BOS", "EOS"]

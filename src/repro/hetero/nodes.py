@@ -1,0 +1,153 @@
+"""Learner and Sampler nodes of the HeteroRL star topology (§4.1, Fig. 3).
+
+- Sampler nodes continuously generate rollout groups with their (stale)
+  policy copy, score them locally (App. F localized rewards — group
+  statistics never cross the network), and stream version-stamped batches
+  to the learner.
+- The learner consumes batches in arrival order inside a fixed
+  time-window / staleness-window, updates parameters, and periodically
+  publishes checkpoints to the ``PolicyStore``; samplers pull the latest
+  version only after their simulated WAN delay D_M.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import PolicyStore, load_pytree, save_pytree
+from repro.config import HeteroConfig, ModelConfig, RLConfig, TrainConfig
+from repro.core.diagnostics import MetricsHistory
+from repro.data import PromptPipeline, score_rollouts
+from repro.data.tasks import ArithmeticTask, Tokenizer
+from repro.hetero.events import EventSim, Transport
+from repro.hetero.latency import sample_delay
+from repro.sampling import generate, token_logps
+from repro.training import TrainState, jit_train_step
+
+
+@dataclasses.dataclass
+class RolloutBatch:
+    tokens: np.ndarray          # (B, T)
+    mask: np.ndarray            # (B, T-1) target-position mask
+    sampler_lp: np.ndarray      # (B, T-1)
+    rewards: np.ndarray         # (B,) group-contiguous
+    version: int                # policy version that generated it
+    created_s: float
+    sampler_id: int
+
+    def nbytes(self) -> int:
+        return (self.tokens.nbytes + self.mask.nbytes
+                + self.sampler_lp.nbytes + self.rewards.nbytes)
+
+
+class SamplerNode:
+    """Generates rollouts with a possibly-stale policy copy."""
+
+    def __init__(self, sid: int, cfg: ModelConfig, rl: RLConfig,
+                 pipeline: PromptPipeline, task: ArithmeticTask,
+                 tok: Tokenizer, params: Any, store: PolicyStore,
+                 hcfg: HeteroConfig, seed: int) -> None:
+        self.sid = sid
+        self.cfg, self.rl = cfg, rl
+        self.pipeline, self.task, self.tok = pipeline, task, tok
+        self.params = params
+        self.store = store
+        self.hcfg = hcfg
+        self.version = 0
+        self.rng = np.random.default_rng(seed)
+        self.key = jax.random.PRNGKey(seed)
+        self.batches_generated = 0
+        self.syncs = 0
+
+    def generate_batch(self, now_s: float) -> RolloutBatch:
+        req = self.pipeline.next_batch()
+        prompts = jnp.asarray(req.prompts)
+        self.key, k = jax.random.split(self.key)
+        roll = generate(self.cfg, self.rl, self.params, prompts, k,
+                        vocab_limit=self.tok.vocab_size)
+        rewards = score_rollouts(self.task, self.tok, req.problems,
+                                 np.asarray(roll["completions"]),
+                                 req.group_size)
+        b, tp = prompts.shape
+        if self.rl.recompute_sampler_logps:
+            # App. B.1: engine logps are untrusted; do a dedicated
+            # forward pass under the *sampler's own* parameters.
+            lp = token_logps(self.cfg, self.params, roll["tokens"])
+            comp_lp = lp[:, tp - 1:]
+        else:
+            comp_lp = roll["sampler_lp"]
+        zeros = np.zeros((b, tp - 1), np.float32)
+        mask = np.concatenate([zeros, np.asarray(roll["comp_mask"])], axis=1)
+        sampler_lp = np.concatenate([zeros, np.asarray(comp_lp)], axis=1)
+        self.batches_generated += 1
+        return RolloutBatch(tokens=np.asarray(roll["tokens"]), mask=mask,
+                            sampler_lp=sampler_lp, rewards=rewards,
+                            version=self.version, created_s=now_s,
+                            sampler_id=self.sid)
+
+    def sync(self) -> None:
+        """Load the latest published checkpoint (post-delay)."""
+        v, data = self.store.fetch()
+        if v > self.version:
+            self.params = load_pytree(data, self.params)
+            self.version = v
+            self.syncs += 1
+
+    def next_delay(self) -> float:
+        return sample_delay(self.rng, self.hcfg)
+
+
+class LearnerNode:
+    """Consumes rollout batches in arrival order within the staleness
+    window; publishes checkpoints."""
+
+    def __init__(self, cfg: ModelConfig, rl: RLConfig, tc: TrainConfig,
+                 hcfg: HeteroConfig, state: TrainState,
+                 store: PolicyStore) -> None:
+        self.cfg, self.rl, self.tc, self.hcfg = cfg, rl, tc, hcfg
+        self.state = state
+        self.store = store
+        self.step_fn = jit_train_step(cfg, rl, tc)
+        self.buffer: List[Tuple[float, RolloutBatch]] = []
+        self.step = 0
+        self.discarded = 0
+        self.history = MetricsHistory()
+        self._publish()
+
+    def _publish(self) -> None:
+        self.store.publish(self.step, save_pytree(self.state.params))
+
+    def receive(self, now_s: float, batch: RolloutBatch) -> None:
+        self.buffer.append((now_s, batch))
+
+    def pop_eligible(self, now_s: float) -> Optional[RolloutBatch]:
+        """Oldest-arrival batch satisfying window + staleness limits."""
+        while self.buffer:
+            arrival, batch = self.buffer[0]
+            window_ok = (now_s - batch.created_s) <= self.hcfg.window_s
+            stale_ok = (self.step - batch.version) <= self.hcfg.max_delay_steps
+            if window_ok and stale_ok:
+                self.buffer.pop(0)
+                return batch
+            self.buffer.pop(0)
+            self.discarded += 1
+        return None
+
+    def train_on(self, batch: RolloutBatch) -> Dict[str, float]:
+        jb = {"tokens": jnp.asarray(batch.tokens),
+              "mask": jnp.asarray(batch.mask),
+              "sampler_lp": jnp.asarray(batch.sampler_lp),
+              "rewards": jnp.asarray(batch.rewards)}
+        self.state, metrics = self.step_fn(self.state, jb)
+        self.step += 1
+        out = {k: float(v) for k, v in metrics.items()}
+        out["staleness"] = float(self.step - 1 - batch.version)
+        out["buffer_len"] = float(len(self.buffer))
+        self.history.append(self.step, out)
+        if self.step % self.hcfg.sync_interval_steps == 0:
+            self._publish()
+        return out

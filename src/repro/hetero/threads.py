@@ -1,0 +1,87 @@
+"""Real-async HeteroRL runtime: learner and sampler nodes as OS threads
+with wall-clock delays — the in-process analogue of the paper's ZeroMQ
+deployment (App. E.2). The event-sim runtime (`runtime.py`) is the
+deterministic default; this backend demonstrates that the node interfaces
+(PolicyStore / queue transport / version-stamped batches) carry over to
+true asynchrony unchanged.
+
+Delays are scaled: 1 simulated second = ``time_scale`` wall seconds, so a
+1800 s WAN delay runs in ~0.18 s by default.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Any, Callable, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import PolicyStore
+from repro.config import HeteroConfig, ModelConfig, RLConfig, TrainConfig
+from repro.core.diagnostics import MetricsHistory
+from repro.data import ArithmeticTask, PromptPipeline, Tokenizer
+from repro.hetero.latency import sample_delay
+from repro.hetero.nodes import LearnerNode, RolloutBatch, SamplerNode
+from repro.training import TrainState
+
+
+class ThreadedHeteroRuntime:
+    def __init__(self, cfg: ModelConfig, rl: RLConfig, tc: TrainConfig,
+                 hcfg: HeteroConfig, task: ArithmeticTask, tok: Tokenizer,
+                 state: TrainState, *, prompts_per_batch: int = 4,
+                 time_scale: float = 1e-4,
+                 queue_size: int = 16) -> None:
+        self.hcfg = hcfg
+        self.time_scale = time_scale
+        self.store = PolicyStore()
+        self.learner = LearnerNode(cfg, rl, tc, hcfg, state, self.store)
+        self.queue: "queue.Queue[RolloutBatch]" = queue.Queue(queue_size)
+        self.samplers = [
+            SamplerNode(i, cfg, rl,
+                        PromptPipeline(task, tok, prompts_per_batch,
+                                       rl.group_size),
+                        task, tok, state.params, self.store, hcfg,
+                        seed=hcfg.seed * 1000 + i)
+            for i in range(hcfg.num_samplers)
+        ]
+        self._stop = threading.Event()
+        self._t0 = time.monotonic()
+
+    # wall-clock stands in for the virtual clock
+    def _now_s(self) -> float:
+        return (time.monotonic() - self._t0) / self.time_scale
+
+    def _sampler_loop(self, s: SamplerNode) -> None:
+        next_sync = self._now_s() + s.next_delay()
+        while not self._stop.is_set():
+            batch = s.generate_batch(self._now_s())
+            try:
+                self.queue.put(batch, timeout=1.0)
+            except queue.Full:
+                pass                      # drop under backpressure
+            if self._now_s() >= next_sync:
+                s.sync()
+                next_sync = self._now_s() + s.next_delay()
+
+    def run(self, num_learner_steps: int) -> MetricsHistory:
+        threads = [threading.Thread(target=self._sampler_loop, args=(s,),
+                                    daemon=True) for s in self.samplers]
+        for t in threads:
+            t.start()
+        try:
+            while self.learner.step < num_learner_steps:
+                try:
+                    batch = self.queue.get(timeout=30.0)
+                except queue.Empty:
+                    raise RuntimeError("samplers starved the learner")
+                self.learner.receive(self._now_s(), batch)
+                b = self.learner.pop_eligible(self._now_s())
+                if b is not None:
+                    self.learner.train_on(b)
+        finally:
+            self._stop.set()
+            for t in threads:
+                t.join(timeout=10.0)
+        return self.learner.history

@@ -1,0 +1,125 @@
+"""Flash attention Pallas TPU kernel (forward).
+
+Grid (B·Hq, n_q_blocks, n_kv_blocks), kv innermost so the online-softmax
+accumulators (m, l, acc) live in VMEM scratch across kv iterations. GQA is
+resolved in the kv BlockSpec index map (kv head = q head // rep). Causal
+and sliding-window masks are applied from absolute block offsets; fully
+masked kv blocks skip compute via ``pl.when``.
+
+Block shapes default to (128, head_dim) — MXU-aligned on the 128 lane
+dimension. VMEM working set per step ≈ (bq+2·bk)·D + bq·bk scores.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, window: Optional[int],
+            softcap: Optional[float], bq: int, bk: int, nk: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = iq * bq
+    k_start = ik * bk
+    # block-level reachability: skip kv blocks that are fully masked
+    reachable = True
+    if causal:
+        reachable = k_start <= q_start + bq - 1
+    if window is not None:
+        reachable = jnp.logical_and(
+            reachable, k_start + bk - 1 > q_start - window)
+
+    @pl.when(reachable)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)            # (bq, d)
+        k = k_ref[0].astype(jnp.float32)            # (bk, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * scale                               # (bq, bk)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        rows = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), bool)
+        if causal:
+            mask &= rows >= cols
+        if window is not None:
+            mask &= rows - cols < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1)
+        acc_scr[...] = (acc_scr[...] * alpha[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    softcap: Optional[float] = None, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False
+                    ) -> jax.Array:
+    """q (B, Sq, Hq, D); k, v (B, Sk, Hkv, D) -> (B, Sq, Hq, D)."""
+    b, sq, hq, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    rep = hq // hkv
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    assert sq % bq == 0 and sk % bk == 0, (sq, sk, bq, bk)
+    nq, nk = sq // bq, sk // bk
+
+    qr = q.transpose(0, 2, 1, 3).reshape(b * hq, sq, d)
+    kr = k.transpose(0, 2, 1, 3).reshape(b * hkv, sk, d)
+    vr = v.transpose(0, 2, 1, 3).reshape(b * hkv, sk, d)
+
+    def kv_index(bh, iq, ik):
+        batch = bh // hq
+        head = bh % hq
+        return (batch * hkv + head // rep, ik, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=d ** -0.5, causal=causal,
+                          window=window, softcap=softcap, bq=bq, bk=bk,
+                          nk=nk),
+        grid=(b * hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, bk, d), kv_index),
+            pl.BlockSpec((1, bk, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, hq, sq, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,50 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode for
+correctness validation; on a real TPU ``interpret=False`` compiles via
+Mosaic. ``use_pallas()`` gates which backend the model layer picks.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.fused_logprob import fused_logprob as _fused_logprob
+from repro.kernels.ssd_scan import ssd_scan as _ssd_scan
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None, block_q: int = 128,
+                    block_k: int = 128, interpret: Optional[bool] = None):
+    interp = (not on_tpu()) if interpret is None else interpret
+    return _flash(q, k, v, causal=causal, window=window, softcap=softcap,
+                  block_q=block_q, block_k=block_k, interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, a_log_neg, b, c, *, chunk: int = 128,
+             interpret: Optional[bool] = None):
+    interp = (not on_tpu()) if interpret is None else interpret
+    return _ssd_scan(x, dt, a_log_neg, b, c, chunk=chunk, interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_v",
+                                             "interpret"))
+def fused_logprob(logits, targets, *, block_t: int = 256,
+                  block_v: int = 2048, interpret: Optional[bool] = None):
+    interp = (not on_tpu()) if interpret is None else interpret
+    return _fused_logprob(logits, targets, block_t=block_t, block_v=block_v,
+                          interpret=interp)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``assert_allclose``
+targets of the kernel test sweeps)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import naive_attention
+from repro.models.ssm import ssd_reference
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, softcap=None):
+    b, s, _, _ = q.shape
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    kind = "causal" if causal else "bidir"
+    if causal and window is not None:
+        kind = "local"
+    return naive_attention(q, k, v, pos_q=pos, pos_k=pos, kind=kind,
+                           window=window or 0, softcap=softcap)
+
+
+def ssd_scan_ref(x, dt, a_log_neg, b, c):
+    y, _ = ssd_reference(x, dt, a_log_neg, b, c)
+    return y.astype(x.dtype)
+
+
+def fused_logprob_ref(logits: jax.Array, targets: jax.Array
+                      ) -> Tuple[jax.Array, jax.Array]:
+    lg = logits.astype(jnp.float32)
+    lp = jax.nn.log_softmax(lg, axis=-1)
+    logp = jnp.take_along_axis(lp, targets[:, None], axis=-1)[:, 0]
+    ent = -(jnp.exp(lp) * lp).sum(-1)
+    return logp, ent

@@ -1,0 +1,182 @@
+"""Analytic per-step cost model (napkin math, §Perf methodology).
+
+``cost_analysis()`` on an XLA executable counts each ``while`` body ONCE —
+our scan-over-blocks models would be undercounted by ~num_blocks×. The
+compute and memory roofline terms therefore come from this analytic model
+(the same arithmetic a performance engineer would do by hand); the
+collective term comes from a loop-aware parse of the compiled HLO
+(``roofline.parse_collectives_loop_aware``). Raw cost_analysis numbers are
+recorded alongside for transparency.
+
+Conventions:
+- FLOPs are *as-compiled*: the chunked attention path computes the full
+  (masked) Sq×Sk rectangle, so causal attention costs 2× the ideal — the
+  ideal is also reported (``attn_waste``).
+- Train steps: matmul FLOPs ×4 (fwd + recompute-under-remat + 2×bwd);
+  inference ×1.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.config import ATTN, CROSS, LOCAL, MAMBA, MLP, MOE, ModelConfig, ShapeConfig
+
+BF16 = 2
+F32 = 4
+
+
+def _attn_flops_per_token(cfg: ModelConfig, kv_len: float, ideal: bool,
+                          kind: str, seq_len: int) -> float:
+    """Score+value matmul FLOPs for one query token against kv_len keys."""
+    if ideal:
+        if kind == ATTN:
+            kv_eff = (kv_len + 1) / 2          # causal average
+        elif kind == LOCAL:
+            kv_eff = min(cfg.sliding_window, kv_len / 2)
+        else:
+            kv_eff = kv_len
+    else:
+        # chunked impl computes the full rectangle then masks
+        kv_eff = kv_len
+    return 4.0 * cfg.num_heads * cfg.head_dim * kv_eff
+
+
+def _layer_matmul_params(cfg: ModelConfig, kind: str, ffn_kind: str) -> int:
+    """Active matmul params for one layer (used at 2 FLOPs/param/token)."""
+    d, h = cfg.d_model, cfg.head_dim
+    n = 0
+    if kind in (ATTN, LOCAL, CROSS):
+        n += d * (cfg.num_heads * h) + 2 * d * (cfg.num_kv_heads * h) \
+            + (cfg.num_heads * h) * d
+    elif kind == MAMBA:
+        di, N, G = cfg.d_inner, cfg.ssm_state, cfg.ssm_ngroups
+        n += d * (2 * di + 2 * G * N + cfg.ssm_heads) + di * d
+    if ffn_kind == MLP:
+        n += 3 * d * cfg.d_ff
+    elif ffn_kind == MOE:
+        n += 3 * d * cfg.d_ff * cfg.experts_per_token + d * cfg.num_experts
+        if cfg.shared_expert:
+            n += 3 * d * cfg.d_ff
+    return n
+
+
+def _ssd_flops_per_token(cfg: ModelConfig) -> float:
+    """Chunked SSD: intra-chunk quadratic + state update, per token."""
+    if not cfg.ssm_state:
+        return 0.0
+    l = cfg.ssm_chunk
+    h, p, n = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    # per chunk: CBᵀ (L²N), y_intra (L²P) per head; states/in/out (L·N·P ×2)
+    per_chunk = 2.0 * h * (l * l * n + l * l * p + 2 * l * n * p)
+    return per_chunk / l
+
+
+def flops_estimate(cfg: ModelConfig, shape: ShapeConfig, *,
+                   ideal: bool = False) -> float:
+    """Global FLOPs per step (whole mesh)."""
+    if shape.kind == "decode":
+        tokens = shape.global_batch
+        kv_len = shape.seq_len
+        mult = 1.0
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        kv_len = shape.seq_len
+        mult = 1.0
+    else:
+        tokens = shape.global_batch * shape.seq_len
+        kv_len = shape.seq_len
+        mult = 4.0                              # fwd + remat + 2·bwd
+
+    total = 0.0
+    for li in range(cfg.num_layers):
+        kind = cfg.block_pattern[li % cfg.period]
+        ffn_kind = cfg.ffn_kind(li % cfg.period)
+        total += 2.0 * _layer_matmul_params(cfg, kind, ffn_kind) * tokens
+        if kind in (ATTN, LOCAL):
+            if shape.kind == "decode":
+                kv_eff = (min(cfg.sliding_window, kv_len)
+                          if kind == LOCAL else kv_len)
+                total += 4.0 * cfg.num_heads * cfg.head_dim * kv_eff * tokens
+            else:
+                total += _attn_flops_per_token(cfg, kv_len, ideal, kind,
+                                               shape.seq_len) * tokens
+        elif kind == CROSS:
+            total += 4.0 * cfg.num_heads * cfg.head_dim * cfg.memory_seq \
+                * tokens
+        elif kind == MAMBA:
+            if shape.kind == "decode":
+                total += 2.0 * cfg.ssm_heads * cfg.ssm_headdim \
+                    * cfg.ssm_state * 2 * tokens
+            else:
+                total += _ssd_flops_per_token(cfg) * tokens
+    # encoder (runs once per step on encoder_seq frames)
+    if cfg.encoder_layers:
+        enc_tokens = shape.global_batch * cfg.encoder_seq
+        if shape.kind == "decode":
+            enc_tokens = 0                      # encoder output cached
+        per = (4 * cfg.d_model * cfg.num_heads * cfg.head_dim
+               + 3 * cfg.d_model * cfg.d_ff)
+        total += 2.0 * per * cfg.encoder_layers * enc_tokens
+        total += 4.0 * cfg.num_heads * cfg.head_dim * cfg.encoder_seq \
+            * enc_tokens
+        # decoder cross-attention to the 1500-frame memory
+        total += 4.0 * cfg.num_heads * cfg.head_dim * cfg.encoder_seq \
+            * tokens
+    # lm head + embedding
+    total += 2.0 * cfg.d_model * cfg.padded_vocab * tokens
+    return total * mult
+
+
+def bytes_estimate(cfg: ModelConfig, shape: ShapeConfig, n_dev: int,
+                   optimizer: str = "adamw") -> Dict[str, float]:
+    """Per-device HBM bytes per step (read+write), by component."""
+    n_params = cfg.param_count()
+    p_dev = n_params * BF16 / n_dev             # params fully sharded
+    if shape.kind == "train":
+        tokens_dev = shape.global_batch * shape.seq_len / n_dev
+        opt_mult = (4 * F32 if optimizer == "adamw" else 2 * BF16)
+        # fwd read + bwd read + grad write (f32) + opt read/write
+        weights = p_dev * (2 + 2) + n_params * F32 / n_dev \
+            + n_params * opt_mult / n_dev
+        # saved residual per block: write in fwd, read in bwd
+        resid = 2 * cfg.num_blocks * tokens_dev * cfg.d_model * BF16
+        logits = 3 * tokens_dev * cfg.padded_vocab * F32 / \
+            (16 if n_dev >= 16 else 1)          # vocab-sharded logits r/w
+        act = 6 * cfg.num_layers * tokens_dev * cfg.d_model * BF16
+        return {"weights": weights, "residuals": resid, "logits": logits,
+                "activations": act,
+                "total": weights + resid + logits + act}
+    if shape.kind == "prefill":
+        tokens_dev = shape.global_batch * shape.seq_len / n_dev * \
+            (16 if n_dev >= 16 else 1)          # batch only over dp
+        p_serve = n_params * BF16 / min(n_dev, 16)   # TP-16 weights
+        act = 4 * cfg.num_layers * tokens_dev * cfg.d_model * BF16
+        cache_w = _cache_bytes(cfg, shape, n_dev)
+        return {"weights": p_serve, "activations": act, "cache": cache_w,
+                "total": p_serve + act + cache_w}
+    # decode: one token — read all params + whole KV cache
+    p_serve = n_params * BF16 / min(n_dev, 16 if shape.name != "long_500k"
+                                    else n_dev)
+    cache = _cache_bytes(cfg, shape, n_dev)
+    return {"weights": p_serve, "cache": cache, "total": p_serve + cache}
+
+
+def _cache_bytes(cfg: ModelConfig, shape: ShapeConfig, n_dev: int) -> float:
+    """Per-device KV/SSM cache bytes."""
+    total = 0.0
+    for li in range(cfg.num_layers):
+        kind = cfg.block_pattern[li % cfg.period]
+        if kind in (ATTN, LOCAL):
+            total += (2 * shape.global_batch * shape.seq_len
+                      * cfg.num_kv_heads * cfg.head_dim * BF16)
+        elif kind == CROSS:
+            total += (2 * shape.global_batch * cfg.memory_seq
+                      * cfg.num_kv_heads * cfg.head_dim * BF16)
+        elif kind == MAMBA:
+            total += (shape.global_batch * cfg.ssm_heads * cfg.ssm_headdim
+                      * cfg.ssm_state * F32)
+    if cfg.encoder_layers:
+        total += (2 * cfg.num_layers * shape.global_batch * cfg.encoder_seq
+                  * cfg.num_kv_heads * cfg.head_dim * BF16)
+    return total / n_dev

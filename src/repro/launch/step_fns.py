@@ -1,0 +1,168 @@
+"""Step functions + abstract inputs for the production launcher and the
+multi-pod dry-run. Everything here works on ``ShapeDtypeStruct``s — no
+real allocation happens for the full-size configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import (ATTN, CROSS, LOCAL, MAMBA, ModelConfig, RLConfig,
+                          ShapeConfig, TrainConfig)
+from repro.models import abstract_params, decode_step, encode, forward, init_cache
+from repro.optim import AdafactorState, AdamWState
+from repro.training import TrainState, train_step
+
+# Architectures whose optimizer state cannot be full-precision Adam within
+# 16 GB/chip at single-pod scale — production choice is Adafactor
+# (factored second moment), exactly as MaxText defaults for very large
+# models.
+ADAFACTOR_ARCHS = ("jamba-1.5-large-398b", "llama4-maverick-400b-a17b",
+                   "llama4-scout-17b-a16e")
+
+
+def optimizer_for(cfg: ModelConfig) -> str:
+    return "adafactor" if cfg.name in ADAFACTOR_ARCHS else "adamw"
+
+
+def grad_accum_for(cfg: ModelConfig) -> int:
+    """Micro-batching keeps per-device live activations bounded (65k
+    tokens/chip at train_4k is far above what fits without it). Chosen per
+    architecture from the dry-run memory sweeps."""
+    n = cfg.param_count()
+    if n > 50e9:
+        return 16
+    if n > 8e9:
+        return 8
+    if n > 3e9:
+        return 4
+    return 1
+
+
+# --------------------------------------------------------------------------
+# step functions
+
+
+def make_train_fn(cfg: ModelConfig, rl: RLConfig, tc: TrainConfig):
+    opt = optimizer_for(cfg)
+
+    def step(state: TrainState, batch: Dict[str, jax.Array]):
+        # frames / image_embeds ride in the batch so grad-accum
+        # micro-batching slices them together with the tokens.
+        return train_step(cfg, rl, tc, state, batch, optimizer=opt)
+    return step
+
+
+def make_prefill_fn(cfg: ModelConfig, max_len: int):
+    def step(params, batch: Dict[str, jax.Array]):
+        tokens = batch["tokens"]
+        memory = None
+        if cfg.is_encdec:
+            memory = encode(cfg, params, batch["frames"])
+        elif cfg.memory_seq:
+            memory = batch["image_embeds"]
+        cache = init_cache(cfg, params, tokens.shape[0], max_len,
+                           memory=memory)
+        logits, cache, _ = forward(cfg, params, tokens, cache=cache,
+                                   memory=memory)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, cache
+    return step
+
+
+def make_decode_fn(cfg: ModelConfig):
+    def step(params, cache, token, pos):
+        logits, new_cache = decode_step(cfg, params, cache, token, pos)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, new_cache
+    return step
+
+
+# --------------------------------------------------------------------------
+# abstract inputs
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def abstract_batch(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    out = {"tokens": _sds((b, s), jnp.int32),
+           "mask": _sds((b, s - 1), jnp.float32),
+           "sampler_lp": _sds((b, s - 1), jnp.float32),
+           "rewards": _sds((b,), jnp.float32)}
+    if cfg.is_encdec:
+        out["frames"] = _sds((b, cfg.encoder_seq, cfg.d_model), cfg.dtype)
+    elif cfg.memory_seq:
+        out["image_embeds"] = _sds((b, cfg.memory_seq, cfg.d_model),
+                                   cfg.dtype)
+    return out
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    """ShapeDtypeStruct twin of ``models.init_cache``."""
+    dt = jnp.dtype(cfg.dtype)
+    nb = cfg.num_blocks
+    mem_len = cfg.encoder_seq if cfg.is_encdec else cfg.memory_seq
+    cache: Dict[str, Any] = {}
+    for i, kind in enumerate(cfg.block_pattern):
+        lc: Dict[str, Any] = {}
+        if kind in (ATTN, LOCAL):
+            ml = max_len
+            if cfg.local_ring_kv and kind == LOCAL:
+                ml = min(max_len, cfg.sliding_window)
+            lc["self"] = {
+                "k": _sds((nb, batch, ml, cfg.num_kv_heads,
+                           cfg.head_dim), dt),
+                "v": _sds((nb, batch, ml, cfg.num_kv_heads,
+                           cfg.head_dim), dt)}
+            if cfg.is_encdec:
+                lc["mem"] = {
+                    "k_mem": _sds((nb, batch, mem_len, cfg.num_kv_heads,
+                                   cfg.head_dim), dt),
+                    "v_mem": _sds((nb, batch, mem_len, cfg.num_kv_heads,
+                                   cfg.head_dim), dt)}
+        elif kind == CROSS:
+            lc["mem"] = {
+                "k_mem": _sds((nb, batch, mem_len, cfg.num_kv_heads,
+                               cfg.head_dim), dt),
+                "v_mem": _sds((nb, batch, mem_len, cfg.num_kv_heads,
+                               cfg.head_dim), dt)}
+        elif kind == MAMBA:
+            conv_ch = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+            lc["ssm_c"] = {
+                "conv": _sds((nb, batch, cfg.ssm_conv - 1, conv_ch), dt),
+                "ssm": _sds((nb, batch, cfg.ssm_heads, cfg.ssm_headdim,
+                             cfg.ssm_state), jnp.float32)}
+        cache[f"layer_{i}"] = lc
+    return cache
+
+
+def abstract_opt_state(cfg: ModelConfig, optimizer: str):
+    params = abstract_params(cfg)
+    if optimizer == "adamw":
+        f32 = lambda p: _sds(p.shape, jnp.float32)
+        return AdamWState(step=_sds((), jnp.int32),
+                          m=jax.tree_util.tree_map(f32, params),
+                          v=jax.tree_util.tree_map(f32, params))
+
+    def row(p):
+        return _sds(p.shape[:-1] if p.ndim >= 2 else p.shape, jnp.float32)
+
+    def col(p):
+        return _sds(p.shape[:-2] + p.shape[-1:] if p.ndim >= 2 else (1,),
+                    jnp.float32)
+
+    return AdafactorState(step=_sds((), jnp.int32),
+                          vr=jax.tree_util.tree_map(row, params),
+                          vc=jax.tree_util.tree_map(col, params))
+
+
+def abstract_state(cfg: ModelConfig) -> TrainState:
+    return TrainState(params=abstract_params(cfg),
+                      opt=abstract_opt_state(cfg, optimizer_for(cfg)),
+                      step=_sds((), jnp.int32))

@@ -1,0 +1,153 @@
+"""Production training driver.
+
+Runs real RL training end-to-end: at CPU scale with a reduced (smoke)
+config by default, or lowering the full config on the production mesh when
+``--dryrun`` (see ``dryrun.py`` for the full sweep). This is example (b)'s
+"end-to-end driver": it trains a small model for a few hundred steps with
+any of the paper's loss types, online or heterogeneous.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b \
+      --loss gepo --steps 200 --mode hetero --max-delay 64
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import HeteroConfig, RLConfig, TrainConfig
+from repro.configs import smoke
+from repro.core.diagnostics import best_last_gap
+from repro.data import ArithmeticTask, Tokenizer
+from repro.data.tasks import EOS
+from repro.hetero import HeteroRuntime, run_online
+from repro.models import init_params
+from repro.training import init_state, jit_sft_step
+
+
+def make_eval_fn(cfg, rl, task, tok, n_prompts=32, seed=1234):
+    """Pass@1-style eval on held-out problems (greedy-ish sampling)."""
+    from repro.data import PromptPipeline, score_rollouts
+    from repro.sampling import generate
+    eval_task = ArithmeticTask(max_operand=task.max_operand, ops=task.ops,
+                               prompt_width=task.prompt_width, seed=seed)
+    probs = eval_task.sample_batch(n_prompts)
+    from repro.data.tasks import encode_prompts
+    prompts = jnp.asarray(np.repeat(encode_prompts(tok, probs), 2, axis=0))
+    key = jax.random.PRNGKey(seed)
+
+    def eval_fn(params) -> float:
+        roll = generate(cfg, rl, params, prompts, key,
+                        vocab_limit=tok.vocab_size)
+        rewards = score_rollouts(eval_task, tok, probs,
+                                 np.asarray(roll["completions"]), 2)
+        return float(rewards.mean())
+    return eval_fn
+
+
+def sft_warmstart(cfg, tc, task, tok, state, steps=400, batch=64, seed=0):
+    """Supervised warm start (the paper RL-tunes a pretrained model)."""
+    rng = np.random.default_rng(seed)
+    step_fn = jit_sft_step(cfg, tc)
+    width = task.prompt_width + 8
+    for i in range(steps):
+        probs = task.sample_batch(batch)
+        rows, masks = [], []
+        for p in probs:
+            ids = tok.encode(p.prompt) + tok.encode(p.answer) + [EOS]
+            m = ([0.0] * (len(tok.encode(p.prompt)) - 1)
+                 + [1.0] * (len(tok.encode(p.answer)) + 1))
+            ids += [0] * (width - len(ids))
+            m += [0.0] * (width - 1 - len(m))
+            rows.append(ids[:width])
+            masks.append(m[:width - 1])
+        state, loss = step_fn(state, jnp.asarray(rows, jnp.int32),
+                              jnp.asarray(masks, jnp.float32))
+    return state, float(loss)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--loss", default="gepo")
+    ap.add_argument("--mode", default="online",
+                    choices=["online", "hetero"])
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--sft-steps", type=int, default=400)
+    ap.add_argument("--group-size", type=int, default=8)
+    ap.add_argument("--prompts", type=int, default=8)
+    ap.add_argument("--max-delay", type=int, default=64)
+    ap.add_argument("--delay-dist", default="lognormal")
+    ap.add_argument("--num-samplers", type=int, default=4)
+    ap.add_argument("--beta-kl", type=float, default=None)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--eval-every", type=int, default=10)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cfg = smoke(args.arch)
+    beta = args.beta_kl if args.beta_kl is not None else (
+        0.0 if args.mode == "online" else 0.005)   # paper §4.1
+    rl = RLConfig(loss_type=args.loss, group_size=args.group_size,
+                  beta_kl=beta, max_new_tokens=6, temperature=1.0,
+                  top_k=0, top_p=1.0)
+    tok = Tokenizer()
+    task = ArithmeticTask(max_operand=20, ops="+", prompt_width=6,
+                          seed=args.seed)
+
+    key = jax.random.PRNGKey(args.seed)
+    params = init_params(cfg, key)
+    tc_sft = TrainConfig(learning_rate=1e-2, total_steps=args.sft_steps)
+    state = init_state(cfg, tc_sft, params)
+    t0 = time.time()
+    state, sft_loss = sft_warmstart(cfg, tc_sft, task, tok, state,
+                                    steps=args.sft_steps, seed=args.seed)
+    print(f"[train] SFT warm start done: loss={sft_loss:.3f} "
+          f"({time.time()-t0:.0f}s)")
+
+    tc = TrainConfig(learning_rate=args.lr, total_steps=args.steps)
+    state = state._replace(step=jnp.zeros((), jnp.int32))
+    eval_fn = make_eval_fn(cfg, rl, task, tok)
+
+    if args.mode == "online":
+        hist, evals, learner = run_online(
+            cfg, rl, tc, task, tok, state, num_steps=args.steps,
+            prompts_per_batch=args.prompts, seed=args.seed,
+            eval_fn=eval_fn, eval_every=args.eval_every)
+    else:
+        hcfg = HeteroConfig(num_samplers=args.num_samplers,
+                            max_delay_steps=args.max_delay,
+                            delay_distribution=args.delay_dist,
+                            delay_median_s=300.0, seed=args.seed)
+        rt = HeteroRuntime(cfg, rl, tc, hcfg, task, tok, state,
+                           prompts_per_batch=args.prompts,
+                           eval_fn=eval_fn, eval_every=args.eval_every)
+        hist = rt.run(args.steps)
+        evals = rt.eval_scores
+        learner = rt.learner
+
+    best, last, gap = best_last_gap(evals)
+    summary = {
+        "arch": args.arch, "loss": args.loss, "mode": args.mode,
+        "steps": learner.step,
+        "reward_mean_last20": float(np.mean(hist.get("reward_mean")[-20:])),
+        "iw_var_mean": float(np.nanmean(hist.get("iw_var"))),
+        "kl_mean": float(np.nanmean(hist.get("kl"))),
+        "eval_best": best, "eval_last": last, "best_to_last_gap": gap,
+        "staleness_mean": float(np.nanmean(hist.get("staleness"))),
+        "wall_s": round(time.time() - t0, 1),
+    }
+    print("[train] " + json.dumps(summary, indent=1))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(summary, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

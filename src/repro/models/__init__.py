@@ -1,0 +1,6 @@
+from repro.models.model import (decode_step, encode, forward, init_cache)
+from repro.models.params import (abstract_params, init_params, param_axes,
+                                 param_templates)
+
+__all__ = ["forward", "encode", "decode_step", "init_cache",
+           "init_params", "abstract_params", "param_axes", "param_templates"]

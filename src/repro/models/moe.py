@@ -1,0 +1,111 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch.
+
+Tokens are routed top-k, sorted by expert id, placed into a dense
+(E, C, d) buffer (capacity C per expert, overflow dropped — Switch-style),
+run through batched expert matmuls, and gathered/combined back. This keeps
+compiled FLOPs proportional to *active* experts (unlike dense all-expert
+dispatch) and, with the expert axis sharded over `model`, lets GSPMD turn
+the scatter/gather into expert-parallel collectives.
+
+Aux losses: router z-loss and load-balance loss (returned for logging, not
+folded into the RL objective by default).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import swiglu
+
+
+# Explicit expert-parallel sharding constraints were tried and REFUTED:
+# they force GSPMD reshards that *triple* peak temp memory (see
+# EXPERIMENTS.md §Perf, hypothesis H-MoE-1). Kept behind a flag for the
+# record.
+ENABLE_CONSTRAINTS = False
+
+
+def _token_axes(cfg: ModelConfig):
+    """Flattened (B·S) sharding axes derived from the residual-stream
+    constraint (batch axes + sequence axis collapse into the token dim)."""
+    if cfg.act_sharding is None:
+        return None
+    axes = []
+    for entry in cfg.act_sharding[:2]:
+        if entry is None:
+            continue
+        axes.extend(entry if isinstance(entry, tuple) else (entry,))
+    return tuple(axes) if axes else None
+
+
+def _wsc(x, spec):
+    return jax.lax.with_sharding_constraint(x, jax.sharding.PartitionSpec(
+        *spec))
+
+
+def moe_ffn(cfg: ModelConfig, p: Dict, x: jax.Array
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (B, S, d) -> (B, S, d), aux metrics."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    t = b * s
+    xf = x.reshape(t, d)
+    tok_ax = _token_axes(cfg) if ENABLE_CONSTRAINTS else None
+    if tok_ax:
+        xf = _wsc(xf, (tok_ax, None))
+
+    logits = (xf.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                    # (T, E)
+    gate, ids = jax.lax.top_k(probs, k)                        # (T, k)
+    if k > 1:
+        gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # capacity per expert (static)
+    cap = max(int(t * k / e * cfg.capacity_factor), 4)
+
+    flat_ids = ids.reshape(-1)                                 # (T*k,)
+    order = jnp.argsort(flat_ids)                              # stable
+    sorted_ids = flat_ids[order]
+    # rank of each entry within its expert segment
+    rank = jnp.arange(t * k) - jnp.searchsorted(sorted_ids, sorted_ids,
+                                                side="left")
+    tok_of = order // k                                        # source token
+    keep = rank < cap
+
+    buf = jnp.zeros((e, cap, d), x.dtype)
+    buf = buf.at[
+        jnp.where(keep, sorted_ids, e - 1),
+        jnp.where(keep, rank, cap - 1),
+    ].set(jnp.where(keep[:, None], xf[tok_of], 0), mode="drop")
+    if tok_ax:
+        buf = _wsc(buf, ("model", None, None))      # expert-parallel
+
+    # batched expert MLPs: (E, C, d) x (E, d, f) -> (E, C, f)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"])       # (E, C, d)
+    if tok_ax:
+        out_buf = _wsc(out_buf, ("model", None, None))
+
+    y_sorted = out_buf[sorted_ids, rank] * keep[:, None]       # (T*k, d)
+    y_flat = jnp.zeros((t * k, d), x.dtype).at[order].set(y_sorted)
+    if tok_ax:
+        y_flat = _wsc(y_flat, (tok_ax, None))
+    y = (y_flat.reshape(t, k, d)
+         * gate[..., None].astype(x.dtype)).sum(axis=1)        # (T, d)
+
+    if cfg.shared_expert:
+        y = y + swiglu(xf, p["shared"])
+
+    # --- aux metrics (Switch-style load balance + z-loss) ---------------
+    me = probs.mean(axis=0)                                    # (E,)
+    ce = jnp.zeros((e,)).at[flat_ids].add(1.0) / (t * k)
+    aux = {
+        "moe_load_balance": e * jnp.sum(me * ce),
+        "moe_z_loss": jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2),
+        "moe_drop_frac": 1.0 - keep.mean(),
+    }
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,287 @@
+"""Mamba2 / SSD (state-space duality) blocks.
+
+Training/prefill uses the chunked SSD algorithm (arXiv:2405.21060): the
+sequence is split into chunks of length L; within a chunk the recurrence is
+computed as a masked quadratic form (MXU-friendly), and chunk states are
+propagated with a short sequential scan. Decode is the O(1) recurrent
+update. All decays are computed in log-space (exponents ≤ 0, so every
+exp() is ≤ 1 — numerically stable).
+
+Shapes:  x (B,S,H,P)  dt (B,S,H)  A (H,) [negative]  B,C (B,S,G,N)
+State: (B,H,P,N).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import rmsnorm
+
+
+def _expand_groups(t: jax.Array, h: int) -> jax.Array:
+    """(B,...,G,N) -> (B,...,H,N) by repeating each group H/G times."""
+    g = t.shape[-2]
+    reps = h // g
+    return jnp.repeat(t, reps, axis=-2)
+
+
+def ssd_chunked(x, dt, a_log_neg, b, c, *, chunk: int,
+                init_state: Optional[jax.Array] = None,
+                head_slice: int = 0) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD with optional head slicing.
+
+    The intra-chunk quadratic form materializes (B, nc, L, L, H) decay /
+    score tensors — at production shapes that is tens of GB per device if
+    all heads are computed at once. ``head_slice`` > 0 processes heads in
+    slices of that size under ``jax.lax.map`` with a rematerialized body,
+    bounding the live working set to (B, nc, L, L, head_slice) (and its
+    backward recomputes instead of saving). 0 = all heads at once (small
+    models / tests)."""
+    bsz, s, h, p = x.shape
+    if head_slice and head_slice < h:
+        assert h % head_slice == 0, (h, head_slice)
+        g = b.shape[2]
+        ns = h // head_slice
+        xs = x.reshape(bsz, s, ns, head_slice, p).transpose(2, 0, 1, 3, 4)
+        dts = dt.reshape(bsz, s, ns, head_slice).transpose(2, 0, 1, 3)
+        als = a_log_neg.reshape(ns, head_slice)
+        # §Perf H-C2: B/C stay in GROUP form per slice. When all heads
+        # share one group (ngroups=1) b/c are CLOSED OVER, not mapped —
+        # putting a broadcast into lax.map xs would materialize the
+        # (ns, B, S, N) copy it exists to avoid.
+        init_s = (jnp.zeros((ns, bsz, head_slice, p, b.shape[-1]),
+                            jnp.float32) if init_state is None else
+                  init_state.reshape(bsz, ns, head_slice, p, -1
+                                     ).transpose(1, 0, 2, 3, 4))
+
+        if g == 1:
+            @jax.checkpoint
+            def one(args):
+                xi, dti, ai, s0 = args
+                return _ssd_chunked_core(xi, dti, ai, b, c, chunk=chunk,
+                                         init_state=s0)
+
+            y, fin = jax.lax.map(one, (xs, dts, als, init_s))
+        else:
+            if g % ns == 0:
+                gs = g // ns
+                bh = b.reshape(bsz, s, ns, gs, -1).transpose(2, 0, 1, 3, 4)
+                ch = c.reshape(bsz, s, ns, gs, -1).transpose(2, 0, 1, 3, 4)
+            else:  # incommensurate: fall back to per-head expansion
+                bh = _expand_groups(b, h).reshape(
+                    bsz, s, ns, head_slice, -1).transpose(2, 0, 1, 3, 4)
+                ch = _expand_groups(c, h).reshape(
+                    bsz, s, ns, head_slice, -1).transpose(2, 0, 1, 3, 4)
+
+            @jax.checkpoint
+            def one(args):
+                xi, dti, ai, bi, ci, s0 = args
+                return _ssd_chunked_core(xi, dti, ai, bi, ci, chunk=chunk,
+                                         init_state=s0)
+
+            y, fin = jax.lax.map(one, (xs, dts, als, bh, ch, init_s))
+        y = y.transpose(1, 2, 0, 3, 4).reshape(bsz, s, h, p)
+        fin = fin.transpose(1, 0, 2, 3, 4).reshape(bsz, h, p, -1)
+        return y, fin
+    return _ssd_chunked_core(x, dt, a_log_neg, b, c, chunk=chunk,
+                             init_state=init_state)
+
+
+def _ssd_chunked_core(x, dt, a_log_neg, b, c, *, chunk: int,
+                      init_state: Optional[jax.Array] = None
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD. Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    bsz, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    l = min(chunk, s)
+    s_orig = s
+    pad = (-s) % l
+    if pad:
+        # dt=0 on padded steps: decay exp(0)=1, contribution 0 — the state
+        # and all real outputs are untouched.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        s += pad
+    nc = s // l
+
+    f32 = jnp.float32
+    x, dt = x.astype(f32), dt.astype(f32)
+    b = _expand_groups(b.astype(f32), h)            # (B,S,H,N)
+    c = _expand_groups(c.astype(f32), h)
+
+    la = (a_log_neg.astype(f32) * dt)               # log a_t  (B,S,H), <= 0
+    u = x * dt[..., None]                           # input contribution
+
+    # chunk views
+    xc = u.reshape(bsz, nc, l, h, p)
+    bc = b.reshape(bsz, nc, l, h, n)
+    cc = c.reshape(bsz, nc, l, h, n)
+    lac = la.reshape(bsz, nc, l, h)
+    cum = jnp.cumsum(lac, axis=2)                   # inclusive  (B,nc,L,H)
+
+    # ---- intra-chunk (quadratic, masked) --------------------------------
+    # decay[t,s] = exp(cum_t - cum_s) for t >= s
+    dec = cum[:, :, :, None] - cum[:, :, None, :, :]        # (B,nc,L,L,H)
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    dec = jnp.where(mask[None, None, :, :, None], dec, -jnp.inf)
+    w = jnp.einsum("bcthn,bcshn->bctsh", cc, bc) * jnp.exp(dec)
+    y_intra = jnp.einsum("bctsh,bcshp->bcthp", w, xc)
+
+    # ---- chunk-local end states ----------------------------------------
+    w_end = jnp.exp(cum[:, :, -1:, :] - cum)                 # (B,nc,L,H)
+    states = jnp.einsum("bcshn,bcsh,bcshp->bchpn", bc, w_end, xc)
+
+    # ---- inter-chunk scan ----------------------------------------------
+    total_dec = jnp.exp(cum[:, :, -1])                       # (B,nc,H)
+    s0 = (jnp.zeros((bsz, h, p, n), f32) if init_state is None
+          else init_state.astype(f32))
+
+    def step(carry, inp):
+        st_c, dec_c = inp                                    # local state, decay
+        new = carry * dec_c[:, :, None, None] + st_c
+        return new, carry                                    # emit state *before* chunk
+
+    final, prev_states = jax.lax.scan(
+        step, s0,
+        (states.transpose(1, 0, 2, 3, 4), total_dec.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)       # (B,nc,H,P,N)
+
+    # ---- inter-chunk contribution ---------------------------------------
+    dec_in = jnp.exp(cum)                                    # decay start->t
+    y_inter = jnp.einsum("bcthn,bcth,bchpn->bcthp", cc, dec_in, prev_states)
+
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    return y[:, :s_orig], final
+
+
+def ssd_reference(x, dt, a_log_neg, b, c, *,
+                  init_state: Optional[jax.Array] = None
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Sequential recurrence oracle (slow, for tests)."""
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    f32 = jnp.float32
+    bh = _expand_groups(b.astype(f32), h)
+    ch = _expand_groups(c.astype(f32), h)
+    a = jnp.exp(a_log_neg.astype(f32) * dt.astype(f32))      # (B,S,H)
+    u = x.astype(f32) * dt.astype(f32)[..., None]
+    s0 = (jnp.zeros((bsz, h, p, n), f32) if init_state is None
+          else init_state.astype(f32))
+
+    def step(state, t):
+        a_t, u_t, b_t, c_t = t
+        state = state * a_t[:, :, None, None] + jnp.einsum(
+            "bhp,bhn->bhpn", u_t, b_t)
+        y_t = jnp.einsum("bhn,bhpn->bhp", c_t, state)
+        return state, y_t
+
+    xs = (a.transpose(1, 0, 2), u.transpose(1, 0, 2, 3),
+          bh.transpose(1, 0, 2, 3), ch.transpose(1, 0, 2, 3))
+    final, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2, 3), final
+
+
+def ssd_decode_step(state, x_t, dt_t, a_log_neg, b_t, c_t):
+    """One-token recurrence. state (B,H,P,N); x_t (B,H,P); dt_t (B,H);
+    b_t,c_t (B,G,N)."""
+    h = x_t.shape[1]
+    f32 = jnp.float32
+    bh = _expand_groups(b_t.astype(f32), h)
+    ch = _expand_groups(c_t.astype(f32), h)
+    a_t = jnp.exp(a_log_neg.astype(f32) * dt_t.astype(f32))
+    u_t = x_t.astype(f32) * dt_t.astype(f32)[..., None]
+    state = state * a_t[:, :, None, None] + jnp.einsum("bhp,bhn->bhpn",
+                                                       u_t, bh)
+    y_t = jnp.einsum("bhn,bhpn->bhp", ch, state)
+    return state, y_t
+
+
+# --------------------------------------------------------------------------
+# full Mamba2 block
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, bias: jax.Array) -> jax.Array:
+    """Depthwise causal conv. xbc (B,S,ch), w (K,ch)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1]] * w[i] for i in range(k))
+    return out + bias
+
+
+def _split_in_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    di, n, g, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_ngroups, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:2 * di + 2 * g * n]
+    dt = zxbcdt[..., 2 * di + 2 * g * n:]
+    return z, xbc, dt
+
+
+def _split_xbc(cfg: ModelConfig, xbc: jax.Array):
+    di, n, g = cfg.d_inner, cfg.ssm_state, cfg.ssm_ngroups
+    x = xbc[..., :di]
+    b = xbc[..., di:di + g * n]
+    c = xbc[..., di + g * n:]
+    shp = x.shape[:-1]
+    return (x.reshape(*shp, cfg.ssm_heads, cfg.ssm_headdim),
+            b.reshape(*shp, g, n), c.reshape(*shp, g, n))
+
+
+def mamba_block(cfg: ModelConfig, p: Dict, x_in: jax.Array,
+                cache: Optional[Dict] = None, decode: bool = False
+                ) -> Tuple[jax.Array, Optional[Dict]]:
+    """x_in (B,S,d) (S==1 for decode). Returns (out, new_cache)."""
+    zxbcdt = x_in @ p["in_proj"]                    # (B,S,fan_out)
+    z, xbc, dt_raw = _split_in_proj(cfg, zxbcdt)
+
+    if decode:
+        assert cache is not None
+        window = jnp.concatenate([cache["conv"], xbc], axis=1)  # (B,K,ch)
+        k = p["conv_w"].shape[0]
+        conv_out = jnp.einsum("bkc,kc->bc", window[:, -k:], p["conv_w"])
+        conv_out = (conv_out + p["conv_b"])[:, None]            # (B,1,ch)
+        new_conv = window[:, 1:]
+    else:
+        conv_out = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+        new_conv = xbc[:, -(p["conv_w"].shape[0] - 1):]
+
+    xbc = jax.nn.silu(conv_out)
+    xs, b, c = _split_xbc(cfg, xbc)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    a_log_neg = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    if decode:
+        state, y = ssd_decode_step(cache["ssm"], xs[:, 0], dt[:, 0],
+                                   a_log_neg, b[:, 0], c[:, 0])
+        y = y[:, None]                                          # (B,1,H,P)
+    else:
+        init = cache["ssm"] if cache is not None else None
+        # bound the intra-chunk working set to ~256 MB f32 per head-slice
+        bsz, s = xs.shape[0], xs.shape[1]
+        l = min(cfg.ssm_chunk, s)
+        nc = -(-s // l)
+        budget = 2 ** 26                       # elements
+        hc = max(1, budget // max(bsz * nc * l * l, 1))
+        h = cfg.ssm_heads
+        while hc < h and h % hc:               # round down to a divisor
+            hc -= 1
+        head_slice = 0 if hc >= h else hc
+        y, state = ssd_chunked(xs, dt, a_log_neg, b, c,
+                               chunk=cfg.ssm_chunk, init_state=init,
+                               head_slice=head_slice)
+
+    y = y + xs.astype(jnp.float32) * p["D"].astype(jnp.float32)[:, None]
+    y = y.reshape(*y.shape[:2], cfg.d_inner)                    # (B,S,di)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rmsnorm(y.astype(x_in.dtype), p["gate_norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+
+    new_cache = {"conv": new_conv, "ssm": state} if (decode or cache is not None
+                                                     ) else {"conv": new_conv,
+                                                             "ssm": state}
+    return out, new_cache

@@ -1,0 +1,133 @@
+"""Optimizers in pure JAX: AdamW (paper's setting) and Adafactor
+(factored second moment — the production choice for the largest MoE
+configs, where full Adam state does not fit 16 GB/chip HBM; see
+EXPERIMENTS.md §Dry-run memory notes)."""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def adamw_init(params: Any, dtype=jnp.float32) -> AdamWState:
+    z = lambda p: jnp.zeros(p.shape, dtype)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      m=jax.tree_util.tree_map(z, params),
+                      v=jax.tree_util.tree_map(z, params))
+
+
+def adamw_update(tc: TrainConfig, grads: Any, state: AdamWState, params: Any,
+                 lr: jax.Array) -> Tuple[Any, AdamWState]:
+    step = state.step + 1
+    b1, b2, eps = tc.b1, tc.b2, tc.eps
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * g32 * g32
+        mhat = m / c1
+        vhat = v / c2
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        if tc.weight_decay:
+            delta = delta + tc.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_m = tdef.flatten_up_to(state.m)
+    flat_v = tdef.flatten_up_to(state.v)
+    flat_p = tdef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step=step, m=new_m, v=new_v)
+
+
+# --------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern 2018), factored second moment, no first moment.
+
+
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    vr: Any      # row stats (for >=2D leaves) or full v (1D)
+    vc: Any      # col stats (zeros placeholder for 1D)
+
+
+def _factored(p: jax.Array) -> bool:
+    return p.ndim >= 2
+
+
+def adafactor_init(params: Any) -> AdafactorState:
+    def r(p):
+        return (jnp.zeros(p.shape[:-1], jnp.float32) if _factored(p)
+                else jnp.zeros(p.shape, jnp.float32))
+
+    def c(p):
+        return (jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                if _factored(p) else jnp.zeros((1,), jnp.float32))
+
+    return AdafactorState(step=jnp.zeros((), jnp.int32),
+                          vr=jax.tree_util.tree_map(r, params),
+                          vc=jax.tree_util.tree_map(c, params))
+
+
+def adafactor_update(tc: TrainConfig, grads: Any, state: AdafactorState,
+                     params: Any, lr: jax.Array,
+                     decay: float = 0.999) -> Tuple[Any, AdafactorState]:
+    step = state.step + 1
+    eps = 1e-30
+
+    def upd(g, vr, vc, p):
+        g32 = g.astype(jnp.float32)
+        g2 = g32 * g32 + eps
+        if _factored(p):
+            vr = decay * vr + (1 - decay) * g2.mean(axis=-1)
+            vc = decay * vc + (1 - decay) * g2.mean(axis=-2)
+            r = vr / jnp.maximum(vr.mean(axis=-1, keepdims=True), eps)
+            denom = jnp.sqrt(r[..., None] * vc[..., None, :])
+        else:
+            vr = decay * vr + (1 - decay) * g2
+            denom = jnp.sqrt(vr)
+        delta = g32 / jnp.maximum(denom, eps)
+        # update clipping (RMS <= 1)
+        rms = jnp.sqrt(jnp.mean(delta * delta) + eps)
+        delta = delta / jnp.maximum(1.0, rms)
+        if tc.weight_decay:
+            delta = delta + tc.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), vr, vc
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_r = tdef.flatten_up_to(state.vr)
+    flat_c = tdef.flatten_up_to(state.vc)
+    flat_p = tdef.flatten_up_to(params)
+    out = [upd(g, r, c, p) for g, r, c, p
+           in zip(flat_g, flat_r, flat_c, flat_p)]
+    return (tdef.unflatten([o[0] for o in out]),
+            AdafactorState(step=step,
+                           vr=tdef.unflatten([o[1] for o in out]),
+                           vc=tdef.unflatten([o[2] for o in out])))
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(tree: Any, max_norm: float
+                        ) -> Tuple[Any, jax.Array]:
+    n = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-12))
+    return jax.tree_util.tree_map(lambda l: l * scale.astype(l.dtype),
+                                  tree), n

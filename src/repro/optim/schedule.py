@@ -1,0 +1,24 @@
+"""Learning-rate schedules. The paper uses 1e-6 with 3% linear warmup."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+
+def warmup_schedule(tc: TrainConfig, step) -> jnp.ndarray:
+    warm = max(int(tc.warmup_frac * tc.total_steps), 1)
+    s = jnp.asarray(step, jnp.float32)
+    frac = jnp.minimum((s + 1.0) / warm, 1.0)   # first step has lr > 0
+    return jnp.asarray(tc.learning_rate, jnp.float32) * frac
+
+
+def cosine_schedule(tc: TrainConfig, step, final_frac: float = 0.1
+                    ) -> jnp.ndarray:
+    warm = max(int(tc.warmup_frac * tc.total_steps), 1)
+    s = jnp.asarray(step, jnp.float32)
+    lr = jnp.asarray(tc.learning_rate, jnp.float32)
+    warm_lr = lr * jnp.minimum(s / warm, 1.0)
+    t = jnp.clip((s - warm) / max(tc.total_steps - warm, 1), 0.0, 1.0)
+    cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(s < warm, warm_lr, lr * cos)

@@ -1,0 +1,37 @@
+"""Process-level runtime context: the active device mesh.
+
+Model code is mesh-agnostic except for the explicitly ``shard_map``-ed
+paths (expert-parallel MoE); those read the mesh registered here by the
+launcher (jax's contextual abstract mesh is empty inside jit traces as of
+jax 0.8)."""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Optional
+
+import jax
+
+_MESH: Optional[jax.sharding.Mesh] = None
+
+
+def set_mesh(mesh: Optional[jax.sharding.Mesh]) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def get_mesh() -> jax.sharding.Mesh:
+    if _MESH is None:
+        raise RuntimeError("no mesh registered — launcher must call "
+                           "repro.runtime_context.set_mesh(mesh)")
+    return _MESH
+
+
+@contextmanager
+def mesh_context(mesh: jax.sharding.Mesh):
+    prev = _MESH
+    set_mesh(mesh)
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        set_mesh(prev)

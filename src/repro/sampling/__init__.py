@@ -1,0 +1,4 @@
+from repro.sampling.engine import generate, token_logps
+from repro.sampling.sample import filter_logits, sample_token
+
+__all__ = ["generate", "token_logps", "filter_logits", "sample_token"]

@@ -1,0 +1,94 @@
+"""Batched KV-cache generation engine (the sampler node's workhorse).
+
+``generate`` runs prefill + a jitted ``lax.scan`` decode loop, recording
+the model log-prob of every sampled token. Per App. B.1 these engine-side
+log-probs are *metadata*: the learner recomputes them with its own forward
+pass by default (``RLConfig.recompute_sampler_logps``), reproducing the
+paper's fix for the vLLM/FSDP log-prob mismatch.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, RLConfig
+from repro.data.tasks import EOS, PAD
+from repro.models import decode_step, forward, init_cache
+from repro.sampling.sample import sample_token
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "rl", "max_new",
+                                             "vocab_limit"))
+def _generate_jit(cfg: ModelConfig, rl: RLConfig, params, prompts, key,
+                  max_new: int, vocab_limit: int,
+                  memory: Optional[jax.Array] = None):
+    b, tp = prompts.shape
+    cache = init_cache(cfg, params, b, tp + max_new, memory=memory)
+    logits, cache, _ = forward(cfg, params, prompts, cache=cache,
+                               memory=memory)
+    last = logits[:, -1]
+
+    def mask_vocab(lg):
+        if vocab_limit < lg.shape[-1]:
+            bad = jnp.arange(lg.shape[-1]) >= vocab_limit
+            lg = jnp.where(bad, -1e30, lg)
+        return lg
+
+    def step(carry, k):
+        cache, last, done, pos = carry
+        lg = mask_vocab(last)
+        tok, _, _ = sample_token(k, lg, temperature=rl.temperature,
+                                 top_k=rl.top_k, top_p=rl.top_p)
+        tok = jnp.where(done, PAD, tok)
+        valid = ~done
+        # report the *full-model* logp of the drawn token (what the
+        # learner's teacher-forced recompute sees — vLLM convention)
+        full_lp = jax.nn.log_softmax(last.astype(jnp.float32), axis=-1)
+        lp_model = jnp.take_along_axis(full_lp, tok[:, None],
+                                       axis=-1)[:, 0]
+        lp_model = jnp.where(done, 0.0, lp_model)
+        new_logits, cache = decode_step(cfg, params, cache, tok, pos,
+                                        memory=memory)
+        done = done | (tok == EOS)
+        return (cache, new_logits, done, pos + 1), (tok, lp_model, valid)
+
+    keys = jax.random.split(key, max_new)
+    (_, _, done, _), (toks, lps, valid) = jax.lax.scan(
+        step, (cache, last, jnp.zeros((b,), bool), jnp.int32(tp)), keys)
+    completions = toks.T                        # (B, max_new)
+    sampler_lp = lps.T
+    comp_mask = valid.T.astype(jnp.float32)
+    return completions, sampler_lp, comp_mask
+
+
+def generate(cfg: ModelConfig, rl: RLConfig, params, prompts: jax.Array,
+             key: jax.Array, *, max_new: Optional[int] = None,
+             vocab_limit: Optional[int] = None,
+             memory: Optional[jax.Array] = None) -> Dict[str, jax.Array]:
+    """Returns a rollout dict:
+    tokens (B, Tp+max_new) | completions (B, max_new) |
+    sampler_lp (B, max_new) engine-side logps | comp_mask (B, max_new).
+    """
+    max_new = max_new or rl.max_new_tokens
+    vocab_limit = vocab_limit or cfg.padded_vocab
+    completions, sampler_lp, comp_mask = _generate_jit(
+        cfg, rl, params, prompts, key, max_new, vocab_limit, memory)
+    tokens = jnp.concatenate([prompts, completions], axis=1)
+    return {"tokens": tokens, "completions": completions,
+            "sampler_lp": sampler_lp, "comp_mask": comp_mask,
+            "prompt_len": prompts.shape[1]}
+
+
+def token_logps(cfg: ModelConfig, params, tokens: jax.Array, *,
+                memory: Optional[jax.Array] = None) -> jax.Array:
+    """Teacher-forced log p(tokens[t] | tokens[<t]) -> (B, T-1).
+
+    On TPU this is served by the ``fused_logprob`` Pallas kernel (see
+    repro.kernels); this is the portable jnp path.
+    """
+    from repro.core.logprob import token_logprob_from_logits
+    logits, _, _ = forward(cfg, params, tokens[:, :-1], memory=memory)
+    return token_logprob_from_logits(logits, tokens[:, 1:])

@@ -1,0 +1,47 @@
+"""Temperature / top-k / top-p sampling in JAX (the paper sweeps all three,
+App. B.5.2)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def filter_logits(logits: jax.Array, *, temperature: float = 1.0,
+                  top_k: int = 0, top_p: float = 1.0) -> jax.Array:
+    """Apply temperature then top-k then top-p (nucleus) filtering.
+    logits (..., V) -> filtered logits (masked entries = -inf)."""
+    if temperature != 1.0:
+        logits = logits / jnp.maximum(temperature, 1e-6)
+    v = logits.shape[-1]
+    if top_k and top_k < v:
+        kth = jnp.sort(logits, axis=-1)[..., v - top_k][..., None]
+        logits = jnp.where(logits < kth, NEG_INF, logits)
+    if top_p < 1.0:
+        sorted_logits = jnp.sort(logits, axis=-1)[..., ::-1]
+        probs = jax.nn.softmax(sorted_logits, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        # keep the smallest prefix with cumulative prob >= top_p
+        keep_sorted = cum - probs < top_p
+        kth = jnp.take_along_axis(
+            sorted_logits, keep_sorted.sum(-1, keepdims=True) - 1, axis=-1)
+        logits = jnp.where(logits < kth, NEG_INF, logits)
+    return logits
+
+
+def sample_token(key: jax.Array, logits: jax.Array, *,
+                 temperature: float = 1.0, top_k: int = 0,
+                 top_p: float = 1.0):
+    """Returns (token (B,), logp_under_sampling_dist (B,),
+    logp_under_model (B,)). The model logp (pre-filter, temperature-1) is
+    what the learner recomputes — the filtered distribution is only used
+    to draw."""
+    filt = filter_logits(logits, temperature=temperature, top_k=top_k,
+                         top_p=top_p)
+    tok = jax.random.categorical(key, filt, axis=-1)
+    model_lp = jax.nn.log_softmax(logits, axis=-1)
+    lp_model = jnp.take_along_axis(model_lp, tok[..., None], axis=-1)[..., 0]
+    filt_lp = jax.nn.log_softmax(filt, axis=-1)
+    lp_filt = jnp.take_along_axis(filt_lp, tok[..., None], axis=-1)[..., 0]
+    return tok, lp_filt, lp_model

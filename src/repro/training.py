@@ -1,0 +1,151 @@
+"""The RL train step: forward → policy loss → grads → clipped optimizer
+update. This single function is shared by
+
+- the HeteroRL learner node (tiny models, real training on CPU),
+- the production launcher (``repro.launch.train``) and the multi-pod
+  dry-run, where it is lowered/compiled against the assigned architecture
+  × input-shape grid with GSPMD sharding.
+
+Batch layout (targets are tokens shifted by one):
+  tokens (B, T) int32 | mask (B, T-1) f32 over target positions |
+  sampler_lp (B, T-1) f32 | rewards (B,) f32, group-contiguous.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, RLConfig, TrainConfig
+from repro.core import group_advantages, policy_loss
+from repro.core.logprob import token_logprob_from_logits
+from repro.models import forward
+from repro.optim import (adafactor_init, adafactor_update, adamw_init,
+                         adamw_update, clip_by_global_norm, warmup_schedule)
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any
+    step: jax.Array
+
+
+def init_state(cfg: ModelConfig, tc: TrainConfig, params,
+               optimizer: str = "adamw") -> TrainState:
+    init = adamw_init if optimizer == "adamw" else adafactor_init
+    return TrainState(params=params, opt=init(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def rl_loss_fn(cfg: ModelConfig, rl: RLConfig, params,
+               batch: Dict[str, jax.Array],
+               memory: Optional[jax.Array] = None
+               ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    # modality stubs ride in the batch so they micro-batch with it
+    if memory is None and "frames" in batch:
+        from repro.models import encode as _encode
+        memory = _encode(cfg, params, batch["frames"])
+    elif memory is None and "image_embeds" in batch:
+        memory = batch["image_embeds"]
+    tokens = batch["tokens"]
+    logits, _, aux = forward(cfg, params, tokens[:, :-1], memory=memory)
+    learner_lp = token_logprob_from_logits(logits, tokens[:, 1:])
+
+    sampler_lp = batch["sampler_lp"]
+    if not rl.recompute_sampler_logps:
+        # trust engine-side logps verbatim (paper shows this is unstable)
+        sampler_lp = jax.lax.stop_gradient(sampler_lp)
+
+    adv = group_advantages(
+        batch["rewards"], rl.group_size,
+        normalize=rl.adv_normalize,
+        kind=rl.loss_type if rl.loss_type in ("bnpo", "dr_grpo") else "grpo")
+    loss, metrics = policy_loss(rl, learner_lp, sampler_lp, batch["mask"],
+                                adv)
+    for k, v in aux.items():                      # MoE router diagnostics
+        metrics[k] = v / max(cfg.num_blocks, 1)
+    metrics["reward_mean"] = batch["rewards"].mean()
+    return loss, metrics
+
+
+def train_step(cfg: ModelConfig, rl: RLConfig, tc: TrainConfig,
+               state: TrainState, batch: Dict[str, jax.Array], *,
+               optimizer: str = "adamw",
+               memory: Optional[jax.Array] = None
+               ) -> Tuple[TrainState, Dict[str, jax.Array]]:
+    """One (optionally micro-batched) RL update."""
+    def loss_fn(params, mb):
+        return rl_loss_fn(cfg, rl, params, mb, memory=memory)
+
+    if tc.grad_accum > 1:
+        def mb_grads(carry, mb):
+            g_acc, m_acc = carry
+            (_, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                state.params, mb)
+            g_acc = jax.tree_util.tree_map(jnp.add, g_acc, g)
+            m_acc = jax.tree_util.tree_map(jnp.add, m_acc, m)
+            return (g_acc, m_acc), None
+
+        mbs = jax.tree_util.tree_map(
+            lambda x: x.reshape((tc.grad_accum, -1) + x.shape[1:]), batch)
+        g0 = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+        (_, m0), _ = jax.value_and_grad(loss_fn, has_aux=True)(
+            state.params, jax.tree_util.tree_map(lambda x: x[0], mbs))
+        m0 = jax.tree_util.tree_map(jnp.zeros_like, m0)
+        (grads, metrics), _ = jax.lax.scan(mb_grads, (g0, m0), mbs)
+        grads = jax.tree_util.tree_map(lambda g: g / tc.grad_accum, grads)
+        metrics = jax.tree_util.tree_map(lambda m: m / tc.grad_accum,
+                                         metrics)
+    else:
+        (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state.params, batch)
+
+    grads, gnorm = clip_by_global_norm(grads, tc.grad_clip)
+    lr = warmup_schedule(tc, state.step)
+    if optimizer == "adamw":
+        new_params, new_opt = adamw_update(tc, grads, state.opt,
+                                           state.params, lr)
+    else:
+        new_params, new_opt = adafactor_update(tc, grads, state.opt,
+                                               state.params, lr)
+    metrics["grad_norm"] = gnorm
+    metrics["lr"] = lr
+    return TrainState(new_params, new_opt, state.step + 1), metrics
+
+
+def jit_train_step(cfg: ModelConfig, rl: RLConfig, tc: TrainConfig,
+                   optimizer: str = "adamw"):
+    @jax.jit
+    def f(state, batch):
+        return train_step(cfg, rl, tc, state, batch, optimizer=optimizer)
+    return f
+
+
+# --------------------------------------------------------------------------
+# Supervised warm-start. The paper RL-tunes a *pretrained* model
+# (Qwen3-1.7B/8B); our CPU-scale experiments mirror that by SFT-ing the
+# tiny model on (prompt, answer) pairs until it emits well-formed answers,
+# then handing it to RL.
+
+
+def sft_loss_fn(cfg: ModelConfig, params, tokens: jax.Array,
+                mask: jax.Array) -> jax.Array:
+    logits, _, _ = forward(cfg, params, tokens[:, :-1])
+    nll = -token_logprob_from_logits(logits, tokens[:, 1:])
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def jit_sft_step(cfg: ModelConfig, tc: TrainConfig):
+    @jax.jit
+    def f(state: TrainState, tokens, mask):
+        loss, grads = jax.value_and_grad(
+            lambda p: sft_loss_fn(cfg, p, tokens, mask))(state.params)
+        grads, gnorm = clip_by_global_norm(grads, tc.grad_clip)
+        lr = warmup_schedule(tc, state.step)
+        new_params, new_opt = adamw_update(tc, grads, state.opt,
+                                           state.params, lr)
+        return TrainState(new_params, new_opt, state.step + 1), loss
+    return f

@@ -1,0 +1,11 @@
+import jax
+import pytest
+
+# Smoke tests and benches must see ONE device — the 512-device fake mesh
+# is set only inside repro/launch/dryrun.py (and the subprocess test).
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,168 @@
+"""Unit tests for the algorithmic core: importance weights per Listing 1,
+advantages, loss assembly, KL estimator."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import RLConfig
+from repro.core import (ALL_METHODS, group_advantages, importance_weights,
+                        kl_k3, policy_loss, seq_logprob)
+from repro.core.importance import group_expectation_log_denominator
+
+
+def _fake_batch(key, b=16, t=10, spread=0.3):
+    ks = jax.random.split(key, 3)
+    lp_l = -jnp.abs(jax.random.normal(ks[0], (b, t)))
+    lp_s = lp_l - spread * jnp.abs(jax.random.normal(ks[1], (b, t)))
+    mask = jnp.ones((b, t))
+    return lp_l, lp_s, mask
+
+
+class TestImportanceWeights:
+    def test_gepo_matches_listing1(self, rng):
+        """GEPO weight == p_seq / (Σq̂·q) with q̂ = q/Σq (eq. 2/3)."""
+        g = 4
+        lp_l, lp_s, mask = _fake_batch(rng, b=8)
+        lw, level = importance_weights("gepo", lp_l, lp_s, mask,
+                                       group_size=g)
+        assert level == "seq"
+        q = np.exp(np.asarray(seq_logprob(lp_s, mask)))
+        p = np.exp(np.asarray(seq_logprob(lp_l, mask)))
+        for gi in range(2):
+            qs = q[gi * g:(gi + 1) * g]
+            ps = p[gi * g:(gi + 1) * g]
+            den = (qs / qs.sum() * qs).sum()
+            np.testing.assert_allclose(
+                np.exp(np.asarray(lw[gi * g:(gi + 1) * g])), ps / den,
+                rtol=1e-5)
+
+    def test_token_level_methods(self, rng):
+        lp_l, lp_s, mask = _fake_batch(rng)
+        for m in ("grpo", "dr_grpo", "bnpo"):
+            lw, level = importance_weights(m, lp_l, lp_s, mask, group_size=4)
+            assert level == "token" and lw.shape == lp_l.shape
+            np.testing.assert_allclose(np.asarray(lw),
+                                       np.asarray(lp_l - lp_s), rtol=1e-6)
+
+    def test_gspo_seq_level(self, rng):
+        lp_l, lp_s, mask = _fake_batch(rng)
+        lw, level = importance_weights("gspo", lp_l, lp_s, mask,
+                                       group_size=4)
+        assert level == "seq"
+        expect = seq_logprob(lp_l, mask) - seq_logprob(lp_s, mask)
+        np.testing.assert_allclose(np.asarray(lw), np.asarray(expect),
+                                   rtol=1e-6)
+
+    def test_gepo_denominator_between_min_max(self, rng):
+        """Ê_q[q] is a convex combination of the group's q values."""
+        lp_l, lp_s, mask = _fake_batch(rng, b=8)
+        q_seq = seq_logprob(lp_s, mask)
+        log_den = group_expectation_log_denominator(q_seq, 4)
+        q = np.asarray(q_seq).reshape(2, 4)
+        den = np.asarray(log_den).reshape(2, 4)
+        for gi in range(2):
+            assert q[gi].min() - 1e-5 <= den[gi][0] <= q[gi].max() + 1e-5
+
+    def test_gepo_no_grad_through_denominator(self, rng):
+        lp_l, lp_s, mask = _fake_batch(rng, b=4)
+
+        def f(lp_s_var):
+            lw, _ = importance_weights("gepo", lp_l, lp_s_var, mask,
+                                       group_size=4)
+            return lw.sum()
+        g = jax.grad(f)(lp_s)
+        assert float(jnp.abs(g).max()) == 0.0
+
+    def test_gepo_smooth_defensive_denominator(self, rng):
+        """App. H: λ-smoothing pulls the weight toward 1."""
+        lp_l, lp_s, mask = _fake_batch(rng, b=8, spread=1.5)
+        lw0, _ = importance_weights("gepo", lp_l, lp_s, mask, group_size=4)
+        lw1, _ = importance_weights("gepo", lp_l, lp_s, mask, group_size=4,
+                                    gepo_smooth=1.0)
+        # λ=1: denominator == p -> weight == 1
+        np.testing.assert_allclose(np.asarray(lw1), 0.0, atol=1e-5)
+        assert float(jnp.abs(lw1).mean()) <= float(jnp.abs(lw0).mean())
+
+
+class TestAdvantages:
+    def test_group_mean_baseline_zero_sum(self, rng):
+        r = jax.random.uniform(rng, (32,))
+        a = group_advantages(r, 8, normalize=False)
+        np.testing.assert_allclose(np.asarray(a.reshape(4, 8).sum(-1)), 0.0,
+                                   atol=1e-5)
+
+    def test_normalization(self, rng):
+        r = jax.random.uniform(rng, (32,))
+        a = group_advantages(r, 8, normalize=True)
+        std = np.asarray(a.reshape(4, 8).std(-1))
+        np.testing.assert_allclose(std, 1.0, atol=0.05)
+
+    def test_dr_grpo_skips_std(self, rng):
+        r = jax.random.uniform(rng, (32,))
+        a1 = group_advantages(r, 8, normalize=True, kind="dr_grpo")
+        a2 = group_advantages(r, 8, normalize=False)
+        np.testing.assert_allclose(np.asarray(a1), np.asarray(a2))
+
+    def test_bnpo_beta_normalization(self):
+        r = jnp.asarray([1., 0., 0., 0., 1., 1., 0., 1.])
+        a = group_advantages(r, 4, kind="bnpo")
+        rho = 0.5
+        np.testing.assert_allclose(
+            np.asarray(a), (np.asarray(r) - rho) / np.sqrt(rho * (1 - rho)),
+            rtol=1e-5)
+
+
+class TestPolicyLoss:
+    @pytest.mark.parametrize("method", ALL_METHODS)
+    def test_all_methods_finite_loss_and_grad(self, rng, method):
+        lp_l, lp_s, mask = _fake_batch(rng)
+        rl = RLConfig(loss_type=method, group_size=4)
+        rewards = (jax.random.uniform(jax.random.PRNGKey(7), (16,))
+                   > 0.5).astype(jnp.float32)
+        adv = group_advantages(rewards, 4)
+        loss, metrics = policy_loss(rl, lp_l, lp_s, mask, adv)
+        assert jnp.isfinite(loss)
+        g = jax.grad(lambda lp: policy_loss(rl, lp, lp_s, mask, adv)[0])(
+            lp_l)
+        assert bool(jnp.isfinite(g).all())
+        for k in ("iw_var", "kl", "est_error", "clip_frac"):
+            assert jnp.isfinite(metrics[k]), k
+
+    def test_onpolicy_grpo_equals_reinforce_direction(self, rng):
+        """With p == q the clipped surrogate gradient is the policy
+        gradient −A·∇log p."""
+        lp_l, _, mask = _fake_batch(rng)
+        rl = RLConfig(loss_type="grpo", group_size=4, beta_kl=0.0,
+                      adv_normalize=False)
+        rewards = jax.random.uniform(jax.random.PRNGKey(3), (16,))
+        adv = group_advantages(rewards, 4, normalize=False)
+        g = jax.grad(lambda lp: policy_loss(rl, lp, jax.lax.stop_gradient(
+            lp), mask, adv)[0])(lp_l)
+        t = mask.sum(-1)
+        expect = -(adv[:, None] / t[:, None]) * jnp.ones_like(lp_l) / 16
+        np.testing.assert_allclose(np.asarray(g), np.asarray(expect),
+                                   rtol=1e-4)
+
+    def test_kl_estimator_nonnegative_and_zero_onpolicy(self, rng):
+        lp_l, lp_s, mask = _fake_batch(rng)
+        assert float(kl_k3(lp_l, lp_l, mask)) == 0.0
+        assert float(kl_k3(lp_l, lp_s, mask)) >= 0.0
+
+    def test_gepo_iw_variance_below_gspo_under_divergence(self, rng):
+        """The paper's core claim at the estimator level: under large
+        policy divergence the group-level weights have (much) smaller
+        variance than sequence-level ones."""
+        ks = jax.random.split(rng, 2)
+        b, t = 64, 12
+        lp_l = -jnp.abs(jax.random.normal(ks[0], (b, t)))
+        lp_s = lp_l - 1.2 * jnp.abs(jax.random.normal(ks[1], (b, t)))
+        mask = jnp.ones((b, t))
+        rewards = (jax.random.uniform(ks[0], (b,)) > 0.5).astype(jnp.float32)
+        adv = group_advantages(rewards, 8)
+        var = {}
+        for m in ("gspo", "gepo"):
+            rl = RLConfig(loss_type=m, group_size=8)
+            _, metrics = policy_loss(rl, lp_l, lp_s, mask, adv)
+            var[m] = float(metrics["iw_var"])
+        assert var["gepo"] < var["gspo"]

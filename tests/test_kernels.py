@@ -1,0 +1,120 @@
+"""Pallas kernel validation: shape/dtype sweeps against the pure-jnp
+oracles in ``repro.kernels.ref`` (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _tols(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("shape", [
+        (1, 128, 4, 4, 32), (2, 256, 8, 2, 64), (1, 512, 4, 1, 64),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_causal_sweep(self, rng, shape, dtype):
+        b, s, hq, hkv, d = shape
+        ks = jax.random.split(rng, 3)
+        q = jax.random.normal(ks[0], (b, s, hq, d), dtype)
+        k = jax.random.normal(ks[1], (b, s, hkv, d), dtype)
+        v = jax.random.normal(ks[2], (b, s, hkv, d), dtype)
+        out = ops.flash_attention(q, k, v, causal=True, block_q=64,
+                                  block_k=64, interpret=True)
+        expect = ref.flash_attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(expect, np.float32),
+            **_tols(dtype))
+
+    @pytest.mark.parametrize("window", [64, 128])
+    def test_sliding_window(self, rng, window):
+        b, s, hq, hkv, d = 2, 256, 4, 2, 32
+        ks = jax.random.split(rng, 3)
+        q = jax.random.normal(ks[0], (b, s, hq, d))
+        k = jax.random.normal(ks[1], (b, s, hkv, d))
+        v = jax.random.normal(ks[2], (b, s, hkv, d))
+        out = ops.flash_attention(q, k, v, causal=True, window=window,
+                                  block_q=64, block_k=64, interpret=True)
+        expect = ref.flash_attention_ref(q, k, v, causal=True,
+                                         window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_softcap_and_bidir(self, rng):
+        b, s, hq, hkv, d = 1, 128, 4, 4, 32
+        ks = jax.random.split(rng, 3)
+        q = jax.random.normal(ks[0], (b, s, hq, d))
+        k = jax.random.normal(ks[1], (b, s, hkv, d))
+        v = jax.random.normal(ks[2], (b, s, hkv, d))
+        for causal, cap in [(True, 30.0), (False, None)]:
+            out = ops.flash_attention(q, k, v, causal=causal, softcap=cap,
+                                      block_q=32, block_k=32,
+                                      interpret=True)
+            expect = ref.flash_attention_ref(q, k, v, causal=causal,
+                                             softcap=cap)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                       rtol=2e-5, atol=2e-5)
+
+
+class TestSSDScan:
+    @pytest.mark.parametrize("shape", [
+        (1, 64, 2, 16, 1, 8), (2, 128, 4, 32, 2, 16), (1, 256, 8, 64, 1, 32),
+    ])
+    def test_shape_sweep(self, rng, shape):
+        b, s, h, p, g, n = shape
+        ks = jax.random.split(rng, 5)
+        x = jax.random.normal(ks[0], (b, s, h, p))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+        a = -jnp.exp(jax.random.normal(ks[2], (h,)))
+        bb = jax.random.normal(ks[3], (b, s, g, n))
+        cc = jax.random.normal(ks[4], (b, s, g, n))
+        y = ops.ssd_scan(x, dt, a, bb, cc, chunk=32, interpret=True)
+        expect = ref.ssd_scan_ref(x, dt, a, bb, cc)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(expect),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_bf16(self, rng):
+        b, s, h, p, g, n = 1, 64, 2, 16, 1, 8
+        ks = jax.random.split(rng, 5)
+        x = jax.random.normal(ks[0], (b, s, h, p), jnp.bfloat16)
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h))
+                             ).astype(jnp.bfloat16)
+        a = -jnp.exp(jax.random.normal(ks[2], (h,)))
+        bb = jax.random.normal(ks[3], (b, s, g, n), jnp.bfloat16)
+        cc = jax.random.normal(ks[4], (b, s, g, n), jnp.bfloat16)
+        y = ops.ssd_scan(x, dt, a, bb, cc, chunk=32, interpret=True)
+        expect = ref.ssd_scan_ref(x, dt, a, bb, cc)
+        np.testing.assert_allclose(np.asarray(y, np.float32),
+                                   np.asarray(expect, np.float32),
+                                   rtol=1e-1, atol=1e-1)
+
+
+class TestFusedLogprob:
+    @pytest.mark.parametrize("shape", [(64, 512), (128, 1024), (32, 256)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_sweep(self, rng, shape, dtype):
+        t, v = shape
+        ks = jax.random.split(rng, 2)
+        logits = (5 * jax.random.normal(ks[0], (t, v))).astype(dtype)
+        tgt = jax.random.randint(ks[1], (t,), 0, v)
+        lp, ent = ops.fused_logprob(logits, tgt, block_t=16, block_v=128,
+                                    interpret=True)
+        lp_e, ent_e = ref.fused_logprob_ref(logits, tgt)
+        tol = dict(rtol=1e-2, atol=1e-2) if dtype == jnp.bfloat16 \
+            else dict(rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(lp), np.asarray(lp_e), **tol)
+        np.testing.assert_allclose(np.asarray(ent), np.asarray(ent_e),
+                                   **tol)
+
+    def test_logprobs_are_valid(self, rng):
+        logits = 3 * jax.random.normal(rng, (32, 512))
+        tgt = jnp.zeros((32,), jnp.int32)
+        lp, ent = ops.fused_logprob(logits, tgt, block_t=16, block_v=128,
+                                    interpret=True)
+        assert bool((lp <= 0).all())
+        assert bool((ent >= 0).all())

@@ -1,0 +1,102 @@
+"""Property-based tests (hypothesis) for Theorems 1–3 of App. A and the
+Fig. 2 variance claims."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import theory
+
+# random discrete distributions over n outcomes
+def dist(n, min_value=1e-3):
+    return st.lists(st.floats(min_value=min_value, max_value=1.0),
+                    min_size=n, max_size=n).map(
+        lambda xs: np.asarray(xs) / np.sum(xs))
+
+
+@st.composite
+def pq_pair(draw, n_min=2, n_max=16, min_value=1e-3):
+    n = draw(st.integers(n_min, n_max))
+    p = draw(dist(n, min_value))
+    q = draw(dist(n, min_value))
+    return p, q
+
+
+class TestTheorem1:
+    @given(pq_pair())
+    @settings(max_examples=200, deadline=None)
+    def test_variance_gap_lower_bound(self, pq):
+        """Δ = Var_std − Var_new ≥ exp(KL(p‖q)) − (n²+1)  (Theorem 1)."""
+        p, q = pq
+        delta, exp_kl, c = theory.theorem1_terms(p, q)
+        assert delta >= exp_kl - c - 1e-6
+
+    @given(pq_pair())
+    @settings(max_examples=200, deadline=None)
+    def test_high_kl_regime_variance_reduction(self, pq):
+        """When KL > log C the new estimator strictly wins."""
+        p, q = pq
+        delta, exp_kl, c = theory.theorem1_terms(p, q)
+        if exp_kl > c:
+            assert delta > 0
+
+    # well-conditioned q only: the MC estimate of Var[p/q] itself has
+    # variance ~ Σp⁴/q³, which explodes for near-zero q masses.
+    @given(pq_pair(n_max=8, min_value=0.15))
+    @settings(max_examples=50, deadline=None)
+    def test_var_std_formula_vs_monte_carlo(self, pq):
+        p, q = pq
+        rng = np.random.default_rng(0)
+        idx = rng.choice(len(p), size=400_000, p=q)
+        w = p[idx] / q[idx]
+        assert np.isclose(w.var(), theory.var_std(p, q),
+                          rtol=0.25, atol=0.05)
+
+    @given(pq_pair(n_max=8, min_value=0.15))
+    @settings(max_examples=50, deadline=None)
+    def test_var_new_formula_vs_monte_carlo(self, pq):
+        p, q = pq
+        rng = np.random.default_rng(1)
+        idx = rng.choice(len(p), size=400_000, p=q)
+        w = p[idx] / np.sum(q * q)
+        assert np.isclose(w.var(), theory.var_new(p, q),
+                          rtol=0.25, atol=0.05)
+
+
+class TestTheorem2:
+    @given(pq_pair(), st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=200, deadline=None)
+    def test_bias_bound(self, pq, seed):
+        """Bias(GEPO) < ‖p‖₂ / ‖q‖₂ for centered bounded advantages."""
+        p, q = pq
+        a = np.random.default_rng(seed).normal(size=len(p))
+        assert theory.bias_gepo(p, q, a) <= theory.bias_bound(p, q) + 1e-9
+
+
+class TestFig2:
+    def test_bernoulli_high_kl_region(self):
+        """p~Bern(0.9), q~Bern(0.1): strongly divergent — GEIW wins."""
+        v_std, v_new = theory.bernoulli_vars(0.9, 0.1)
+        assert v_new < v_std
+
+    def test_bernoulli_low_kl_region_can_lose(self):
+        """The paper admits a small green region where GEIW is worse."""
+        v_std, v_new = theory.bernoulli_vars(0.5, 0.5)
+        assert v_std == pytest.approx(0.0, abs=1e-12)
+        assert v_new >= 0.0
+
+    def test_gaussian_variance_reduction_grows_with_kl(self):
+        gaps = []
+        for delta_mu in (1.0, 2.0, 3.0):
+            v_std, v_new, kl = theory.gaussian_vars(0.0, delta_mu)
+            gaps.append(v_std - v_new)
+        assert gaps[0] < gaps[1] < gaps[2]
+        assert gaps[2] > 0
+
+    def test_chi2_kl_inequality(self):
+        """KL ≤ log(1 + χ²) (eq. 22) on random distributions."""
+        rng = np.random.default_rng(0)
+        for _ in range(100):
+            n = rng.integers(2, 30)
+            p = rng.dirichlet(np.ones(n))
+            q = rng.dirichlet(np.ones(n))
+            assert theory.kl(p, q) <= np.log1p(theory.chi2(p, q)) + 1e-9
