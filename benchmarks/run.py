@@ -1,13 +1,16 @@
 """Benchmark harness entrypoint: one module per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run [--only fig2,table1,...]
+  PYTHONPATH=src python -m benchmarks.run [--only fig2,table1,...] [--smoke]
 
 Budget knobs: BENCH_STEPS (default 30), BENCH_FULL=1 for paper-scale runs.
+``--smoke`` runs a tiny fast subset (<60 s CPU) so CI can exercise the
+benchmark entrypoints without burning minutes.
 Output: CSV rows `table,setting,metrics...` on stdout.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
 import traceback
 
@@ -22,15 +25,29 @@ MODULES = [
     ("table12", "benchmarks.table12_async"),
     ("table13", "benchmarks.table13_ablation"),
     ("hyperparams", "benchmarks.hyperparams"),
+    ("serve", "benchmarks.serve_throughput"),
 ]
+
+# modules cheap enough for the CI smoke job ("serve" stays out: CI
+# exercises benchmarks.serve_throughput --smoke as its own step)
+SMOKE_MODULES = ("fig2", "theory")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of benchmark names")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny fast subset for CI (<60 s CPU)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
+    if args.smoke:
+        # must be set before the modules import benchmarks.common
+        os.environ["BENCH_SMOKE"] = "1"
+        os.environ.setdefault("BENCH_STEPS", "4")
+        os.environ.setdefault("BENCH_SFT_STEPS", "20")
+        if only is None:
+            only = set(SMOKE_MODULES)
 
     t0 = time.time()
     failures = []

@@ -210,6 +210,10 @@ class RLConfig:
     max_new_tokens: int = 32
     recompute_sampler_logps: bool = True   # App. B.1 vLLM/FSDP mismatch fix
     entropy_bonus: float = 0.0
+    # Generation engine for sampler nodes: "static" = one lax.scan to
+    # max_new_tokens; "continuous" = slot pool + paged KV cache with EOS
+    # slot recycling (see repro/sampling/scheduler.py).
+    engine: str = "static"
 
 
 @dataclass(frozen=True)

@@ -12,6 +12,7 @@
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -50,25 +51,43 @@ class SamplerNode:
     def __init__(self, sid: int, cfg: ModelConfig, rl: RLConfig,
                  pipeline: PromptPipeline, task: ArithmeticTask,
                  tok: Tokenizer, params: Any, store: PolicyStore,
-                 hcfg: HeteroConfig, seed: int) -> None:
+                 hcfg: HeteroConfig, seed: int,
+                 engine: Optional[str] = None) -> None:
         self.sid = sid
         self.cfg, self.rl = cfg, rl
         self.pipeline, self.task, self.tok = pipeline, task, tok
         self.params = params
         self.store = store
         self.hcfg = hcfg
+        self.engine = engine or rl.engine
         self.version = 0
         self.rng = np.random.default_rng(seed)
         self.key = jax.random.PRNGKey(seed)
         self.batches_generated = 0
         self.syncs = 0
+        # operator telemetry: generation rate of this node (the service
+        # rate of the rollout queue in the HeteroRL picture) plus the
+        # last rollout's engine stats, exposed via tokens_per_s below.
+        self.tokens_generated = 0
+        self.gen_seconds = 0.0
+        self.engine_stats: Dict[str, float] = {}
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.tokens_generated / self.gen_seconds \
+            if self.gen_seconds else 0.0
 
     def generate_batch(self, now_s: float) -> RolloutBatch:
         req = self.pipeline.next_batch()
         prompts = jnp.asarray(req.prompts)
         self.key, k = jax.random.split(self.key)
+        t0 = time.perf_counter()
         roll = generate(self.cfg, self.rl, self.params, prompts, k,
-                        vocab_limit=self.tok.vocab_size)
+                        vocab_limit=self.tok.vocab_size, engine=self.engine)
+        self.tokens_generated += int(np.asarray(roll["comp_mask"]).sum())
+        self.gen_seconds += time.perf_counter() - t0
+        if "stats" in roll:
+            self.engine_stats = dict(roll["stats"])
         rewards = score_rollouts(self.task, self.tok, req.problems,
                                  np.asarray(roll["completions"]),
                                  req.group_size)

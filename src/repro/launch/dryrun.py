@@ -32,6 +32,7 @@ from repro.launch import step_fns as sf
 from repro.launch.costmodel import bytes_estimate, flops_estimate
 from repro.launch.mesh import data_axes, make_production_mesh
 from repro.launch.roofline import (entry_io_bytes, model_flops,
+                                   normalize_cost_analysis,
                                    parse_collective_bytes,
                                    parse_collectives_loop_aware, roofline)
 
@@ -142,7 +143,7 @@ def lower_combo(arch: str, shape_name: str, mesh, *,
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
 
-    cost = compiled.cost_analysis() or {}
+    cost = normalize_cost_analysis(compiled.cost_analysis())
     raw_flops = float(cost.get("flops", 0.0))
     raw_bytes = float(cost.get("bytes accessed", 0.0))
     mem = compiled.memory_analysis()

@@ -21,6 +21,15 @@ from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_BF16_FLOPS
 COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                "collective-permute")
 
+
+def normalize_cost_analysis(cost) -> Dict[str, float]:
+    """``Compiled.cost_analysis()`` returns a per-device list on
+    jax<=0.4.x and a flat dict on newer releases; normalize to a dict.
+    (Lives here, not in dryrun.py — importing dryrun mutates XLA_FLAGS.)"""
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
+
 _DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1,
                 "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
                 "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,

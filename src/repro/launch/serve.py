@@ -3,9 +3,14 @@ HeteroRL *sampler node* runs. CPU-scale by default (smoke config); the
 full-size serving path is exercised shape-exactly by ``dryrun.py``
 (prefill_32k / decode_32k / long_500k).
 
+Two engines (``--engine``):
+  static      one lax.scan to --max-new for the whole batch
+  continuous  slot pool + paged KV cache; EOS frees the slot for the
+              next queued prompt (see repro/sampling/scheduler.py)
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b \
-      --batch 16 --max-new 24
+      --batch 16 --max-new 24 --engine continuous --slots 8
 """
 from __future__ import annotations
 
@@ -29,6 +34,18 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--engine", choices=("static", "continuous"),
+                    default="static")
+    ap.add_argument("--slots", type=int, default=8,
+                    help="decode slots (continuous engine)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV page size in tokens (continuous engine)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="prompt tokens prefilled per engine iteration "
+                         "(0 = whole prompt in one chunk)")
+    ap.add_argument("--sync-every", type=int, default=8,
+                    help="decode horizon: jitted decode steps per "
+                         "scheduler sync (continuous engine)")
     ap.add_argument("--temperature", type=float, default=0.6)
     ap.add_argument("--top-k", type=int, default=20)
     ap.add_argument("--top-p", type=float, default=0.95)
@@ -37,7 +54,8 @@ def main() -> None:
 
     cfg = smoke(args.arch)
     rl = RLConfig(temperature=args.temperature, top_k=args.top_k,
-                  top_p=args.top_p, max_new_tokens=args.max_new)
+                  top_p=args.top_p, max_new_tokens=args.max_new,
+                  engine=args.engine)
     tok = Tokenizer()
     task = ArithmeticTask(max_operand=99, ops="+-", prompt_width=8,
                           seed=args.seed)
@@ -54,6 +72,13 @@ def main() -> None:
             key, (args.batch, cfg.memory_seq, cfg.d_model)
         ).astype(cfg.dtype)
 
+    gen_kwargs = {}
+    if args.engine == "continuous":
+        gen_kwargs = {"num_slots": args.slots, "page_size": args.page_size,
+                      "sync_every": args.sync_every}
+        if args.prefill_chunk:
+            gen_kwargs["prefill_chunk"] = args.prefill_chunk
+
     total_tok = 0
     t0 = time.time()
     for r in range(args.rounds):
@@ -62,16 +87,22 @@ def main() -> None:
         key, k = jax.random.split(key)
         t1 = time.time()
         roll = generate(cfg, rl, params, prompts, k, max_new=args.max_new,
-                        vocab_limit=tok.vocab_size, memory=memory)
+                        vocab_limit=tok.vocab_size, memory=memory,
+                        **gen_kwargs)
         dt = time.time() - t1
         n_tok = int(np.asarray(roll["comp_mask"]).sum())
         total_tok += n_tok
         outs = [tok.decode(row) for row in np.asarray(roll["completions"])]
+        util = ""
+        if "stats" in roll:
+            util = (f" | slot-util {roll['stats']['slot_utilization']:.2f}"
+                    f" ({roll['stats']['decode_steps']} decode steps)")
         print(f"[serve] round {r}: {n_tok} tokens in {dt:.2f}s "
-              f"({n_tok/dt:.1f} tok/s) | sample: "
+              f"({n_tok/dt:.1f} tok/s){util} | sample: "
               f"{probs[0].prompt.strip()!r} -> {outs[0]!r}")
-    print(f"[serve] arch={cfg.name} batch={args.batch} total {total_tok} "
-          f"tokens, {total_tok/(time.time()-t0):.1f} tok/s incl. compile")
+    print(f"[serve] arch={cfg.name} engine={args.engine} "
+          f"batch={args.batch} total {total_tok} tokens, "
+          f"{total_tok/(time.time()-t0):.1f} tok/s incl. compile")
 
 
 if __name__ == "__main__":

@@ -342,7 +342,9 @@ def decode_attention(q, k_cache, v_cache, *, pos, kind="causal",
                      window=4096, softcap=None):
     """Single-token attention against a (B, Smax, Hkv, D) cache.
 
-    q: (B, 1, Hq, D); pos: scalar current position (entries > pos masked).
+    q: (B, 1, Hq, D); pos: current position — a scalar, or a (B,) vector
+    when rows decode at heterogeneous positions (continuous batching).
+    Entries > pos are masked.
     """
     b, _, hq, d = q.shape
     smax, hkv = k_cache.shape[1], k_cache.shape[2]
@@ -350,10 +352,11 @@ def decode_attention(q, k_cache, v_cache, *, pos, kind="causal",
     qg = q.reshape(b, 1, g, r, d)
     s = _scores(qg, k_cache, softcap)[:, :, :, 0]          # (B,G,R,Smax)
     idx = jnp.arange(smax)
-    valid = idx <= pos
+    posv = jnp.reshape(jnp.asarray(pos), (-1, 1))          # (1|B, 1)
+    valid = idx[None, :] <= posv
     if kind == "local":
-        valid &= idx > pos - window
-    s = jnp.where(valid[None, None, None], s, NEG_INF)
+        valid &= idx[None, :] > posv - window
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bgrk,bkgd->bgrd", p, v_cache.astype(jnp.float32))
     return o.reshape(b, 1, hq, d).astype(q.dtype)

@@ -43,11 +43,14 @@ def _project_qkv(cfg: ModelConfig, p: Dict, xq: jax.Array,
 
 def _self_attn(cfg: ModelConfig, p: Dict, x: jax.Array, *, kind: str,
                positions: jax.Array, cache: Optional[Dict], pos,
-               bidir: bool = False):
+               bidir: bool = False, page_table: Optional[jax.Array] = None):
     """Self-attention sub-layer body (input already normed).
 
     Returns (out, new_cache). In decode mode (pos is not None) x is
-    (B,1,d) and the cache k/v are updated in place at ``pos``.
+    (B,1,d) and the cache k/v are updated in place at ``pos``. When the
+    cache is *paged* (holds "kp"/"vp" page pools and ``page_table`` maps
+    (slot, logical_page) -> physical page), both chunked prefill and
+    decode go through the paged scatter/gather path instead.
     """
     q, k, v = _project_qkv(cfg, p, x, x)
     q = rope(q, positions, cfg.rope_theta)
@@ -63,6 +66,37 @@ def _self_attn(cfg: ModelConfig, p: Dict, x: jax.Array, *, kind: str,
         v = jax.lax.with_sharding_constraint(v, spec)
     mask_kind = ("bidir" if bidir else
                  "local" if kind == LOCAL else "causal")
+
+    if cache is not None and "kp" in cache:               # paged KV cache
+        b, sq = x.shape[0], x.shape[1]
+        kp, vp = cache["kp"], cache["vp"]
+        page_size = kp.shape[1]
+        page = positions // page_size                     # (B, Sq) logical
+        off = positions % page_size
+        # logical pages past the block-table width (only padded prefill
+        # tails reach here) must gather an OOB sentinel so the scatter
+        # below drops the write instead of clamping onto a live page
+        phys = jnp.take_along_axis(page_table, page, axis=1, mode="fill",
+                                   fill_value=jnp.iinfo(jnp.int32).min)
+        kp = kp.at[phys, off].set(k.astype(kp.dtype))
+        vp = vp.at[phys, off].set(v.astype(vp.dtype))
+        pages_per_slot = page_table.shape[1]
+        lview = pages_per_slot * page_size
+        kv_shape = (b, lview, cfg.num_kv_heads, cfg.head_dim)
+        kc = kp[page_table].reshape(kv_shape)             # slot's logical view
+        vc = vp[page_table].reshape(kv_shape)
+        if sq == 1:                                       # decode
+            o = attn_mod.decode_attention(q, kc, vc, pos=positions[:, 0],
+                                          kind=mask_kind,
+                                          window=cfg.sliding_window,
+                                          softcap=cfg.attn_softcap)
+        else:                                             # chunked prefill
+            pos_k = jnp.broadcast_to(jnp.arange(lview), (b, lview))
+            o = attn_mod.attention(q, kc, vc, pos_q=positions, pos_k=pos_k,
+                                   kind=mask_kind, window=cfg.sliding_window,
+                                   softcap=cfg.attn_softcap,
+                                   impl=cfg.attn_impl, chunk=cfg.attn_chunk)
+        return o.reshape(b, sq, -1) @ p["wo"], {"kp": kp, "vp": vp}
 
     ring = (cfg.local_ring_kv and kind == LOCAL)
     if pos is not None:                                   # decode
@@ -141,7 +175,7 @@ def _ffn(cfg: ModelConfig, kind: str, p: Dict, x: jax.Array,
 
 def _apply_layer(cfg: ModelConfig, idx_in_block: int, p: Dict, x: jax.Array,
                  *, positions, memory, cache, pos, aux,
-                 encoder: bool = False):
+                 encoder: bool = False, page_table=None):
     kind = ATTN if encoder else cfg.block_pattern[idx_in_block]
     ffn_kind = MLP if encoder else cfg.ffn_kind(idx_in_block)
     new_cache: Dict[str, Any] = {}
@@ -150,7 +184,7 @@ def _apply_layer(cfg: ModelConfig, idx_in_block: int, p: Dict, x: jax.Array,
     if kind in (ATTN, LOCAL):
         o, c = _self_attn(cfg, p["attn"], h, kind=kind, positions=positions,
                           cache=None if cache is None else cache.get("self"),
-                          pos=pos, bidir=encoder)
+                          pos=pos, bidir=encoder, page_table=page_table)
         x = x + o
         if c is not None:
             new_cache["self"] = c
@@ -201,7 +235,8 @@ def _aux_init(cfg: ModelConfig) -> Dict[str, jax.Array]:
 
 
 def _run_blocks(cfg: ModelConfig, blocks: Dict, x: jax.Array, *,
-                positions, memory, cache, pos, encoder=False):
+                positions, memory, cache, pos, encoder=False,
+                page_table=None):
     """Scan super-blocks. cache (if given) is a pytree stacked on axis 0
     matching ``blocks``; returns (x, new_cache, aux)."""
     aux0 = {} if encoder else _aux_init(cfg)
@@ -218,7 +253,8 @@ def _run_blocks(cfg: ModelConfig, blocks: Dict, x: jax.Array, *,
             lc = None if bc is None else bc.get(f"layer_{i}")
             x, nc, aux = _apply_layer(cfg, i, lp, x, positions=positions,
                                       memory=memory, cache=lc, pos=pos,
-                                      aux=aux, encoder=encoder)
+                                      aux=aux, encoder=encoder,
+                                      page_table=page_table)
             if bc is not None:
                 new_bc[f"layer_{i}"] = nc
         return (x, aux), (new_bc if bc is not None else 0)
@@ -281,11 +317,15 @@ def forward(cfg: ModelConfig, params: Dict, tokens: jax.Array, *,
             memory: Optional[jax.Array] = None,
             positions: Optional[jax.Array] = None,
             cache: Optional[Dict] = None,
+            page_table: Optional[jax.Array] = None,
             ) -> Tuple[jax.Array, Optional[Dict], Dict]:
     """Full-sequence forward (training / prefill).
 
     tokens (B, S) -> logits (B, S, V_padded) in f32.
-    If ``cache`` is provided it is filled (prefill) and returned.
+    If ``cache`` is provided it is filled (prefill) and returned. A paged
+    cache (page pools from ``repro.sampling.paged_cache``) additionally
+    needs ``page_table`` (B, pages_per_slot) and explicit ``positions``
+    for chunked prefill at an offset.
     """
     b, s = tokens.shape
     if positions is None:
@@ -293,24 +333,34 @@ def forward(cfg: ModelConfig, params: Dict, tokens: jax.Array, *,
     x = _embed(cfg, params, tokens)
     x, new_cache, aux = _run_blocks(cfg, params["blocks"], x,
                                     positions=positions, memory=memory,
-                                    cache=cache, pos=None)
+                                    cache=cache, pos=None,
+                                    page_table=page_table)
     return _logits(cfg, params, x), new_cache, aux
 
 
 def decode_step(cfg: ModelConfig, params: Dict, cache: Dict,
                 token: jax.Array, pos: jax.Array, *,
-                memory: Optional[jax.Array] = None
+                memory: Optional[jax.Array] = None,
+                page_table: Optional[jax.Array] = None
                 ) -> Tuple[jax.Array, Dict]:
-    """One decode step. token (B,) int32; pos scalar int32.
+    """One decode step. token (B,) int32; pos scalar int32, or a (B,)
+    vector when rows decode at heterogeneous positions (requires a paged
+    cache + ``page_table`` — the dense cache layout assumes one shared
+    write position).
 
     Returns (logits (B, V_padded) f32, new_cache).
     """
     b = token.shape[0]
-    positions = jnp.full((b, 1), pos, jnp.int32)
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        positions = jnp.full((b, 1), pos, jnp.int32)
+    else:
+        positions = pos.astype(jnp.int32)[:, None]
     x = _embed(cfg, params, token[:, None])
     x, new_cache, _ = _run_blocks(cfg, params["blocks"], x,
                                   positions=positions, memory=memory,
-                                  cache=cache, pos=pos)
+                                  cache=cache, pos=pos,
+                                  page_table=page_table)
     return _logits(cfg, params, x)[:, 0], new_cache
 
 

@@ -1,4 +1,10 @@
-from repro.sampling.engine import generate, token_logps
-from repro.sampling.sample import filter_logits, sample_token
+from repro.sampling.engine import generate, generate_continuous, token_logps
+from repro.sampling.paged_cache import (PageAllocator, init_paged_pool,
+                                        paged_cache_supported, pages_for)
+from repro.sampling.sample import filter_logits, sample_token, sample_token_rows
+from repro.sampling.scheduler import ContinuousScheduler, GenRequest
 
-__all__ = ["generate", "token_logps", "filter_logits", "sample_token"]
+__all__ = ["generate", "generate_continuous", "token_logps", "filter_logits",
+           "sample_token", "sample_token_rows", "PageAllocator",
+           "init_paged_pool", "paged_cache_supported", "pages_for",
+           "ContinuousScheduler", "GenRequest"]

@@ -1,23 +1,60 @@
-"""Batched KV-cache generation engine (the sampler node's workhorse).
+"""Generation engines (the sampler node's workhorse).
 
-``generate`` runs prefill + a jitted ``lax.scan`` decode loop, recording
-the model log-prob of every sampled token. Per App. B.1 these engine-side
-log-probs are *metadata*: the learner recomputes them with its own forward
-pass by default (``RLConfig.recompute_sampler_logps``), reproducing the
-paper's fix for the vLLM/FSDP log-prob mismatch.
+Two engines share one contract (a rollout dict with tokens, completions,
+engine-side log-probs and a completion mask):
+
+- **static** — prefill + one jitted ``lax.scan`` decode loop over the
+  whole batch. Every sequence runs the full ``max_new`` steps even after
+  EOS (finished rows decode PAD into dead cache slots).
+- **continuous** — a fixed pool of decode slots over a paged
+  (block-table) KV cache with a request queue: finished sequences free
+  their slot and pages immediately, and chunked prefill for the next
+  queued prompt interleaves with the jitted decode step. Same tokens and
+  log-probs as the static engine for identical seeds (RNG is folded per
+  request, never per batch position), but no wasted decode steps.
+
+Per App. B.1 the engine-side log-probs are *metadata*: the learner
+recomputes them with its own forward pass by default
+(``RLConfig.recompute_sampler_logps``), reproducing the paper's fix for
+the vLLM/FSDP log-prob mismatch.
 """
 from __future__ import annotations
 
 import functools
-from typing import Dict, Optional, Tuple
+import warnings
+from typing import Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.config import ModelConfig, RLConfig
 from repro.data.tasks import EOS, PAD
 from repro.models import decode_step, forward, init_cache
-from repro.sampling.sample import sample_token
+from repro.sampling.paged_cache import (PageAllocator, SCRATCH_PAGE,
+                                        init_paged_pool,
+                                        paged_cache_supported, pages_for)
+from repro.sampling.sample import sample_token_rows
+from repro.sampling.scheduler import (DECODE, PREFILL, ContinuousScheduler,
+                                      GenRequest)
+
+
+def _mask_vocab(lg: jax.Array, vocab_limit: int) -> jax.Array:
+    if vocab_limit < lg.shape[-1]:
+        bad = jnp.arange(lg.shape[-1]) >= vocab_limit
+        lg = jnp.where(bad, -1e30, lg)
+    return lg
+
+
+def _model_logp(last: jax.Array, tok: jax.Array) -> jax.Array:
+    """Full-model logp of the drawn token (what the learner's
+    teacher-forced recompute sees — vLLM convention)."""
+    full_lp = jax.nn.log_softmax(last.astype(jnp.float32), axis=-1)
+    return jnp.take_along_axis(full_lp, tok[:, None], axis=-1)[:, 0]
+
+
+# --------------------------------------------------------------------------
+# static engine: one lax.scan to max_new
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "rl", "max_new",
@@ -30,50 +67,260 @@ def _generate_jit(cfg: ModelConfig, rl: RLConfig, params, prompts, key,
     logits, cache, _ = forward(cfg, params, prompts, cache=cache,
                                memory=memory)
     last = logits[:, -1]
+    # one RNG stream per request row: draw t uses fold_in(fold_in(key, r), t)
+    # — identical draws no matter which engine/slot serves the request.
+    row_keys = jax.vmap(lambda r: jax.random.fold_in(key, r))(jnp.arange(b))
 
-    def mask_vocab(lg):
-        if vocab_limit < lg.shape[-1]:
-            bad = jnp.arange(lg.shape[-1]) >= vocab_limit
-            lg = jnp.where(bad, -1e30, lg)
-        return lg
-
-    def step(carry, k):
+    def step(carry, t):
         cache, last, done, pos = carry
-        lg = mask_vocab(last)
-        tok, _, _ = sample_token(k, lg, temperature=rl.temperature,
-                                 top_k=rl.top_k, top_p=rl.top_p)
+        lg = _mask_vocab(last, vocab_limit)
+        kt = jax.vmap(jax.random.fold_in)(row_keys, jnp.full((b,), t))
+        tok, _, _ = sample_token_rows(kt, lg, temperature=rl.temperature,
+                                      top_k=rl.top_k, top_p=rl.top_p)
         tok = jnp.where(done, PAD, tok)
         valid = ~done
-        # report the *full-model* logp of the drawn token (what the
-        # learner's teacher-forced recompute sees — vLLM convention)
-        full_lp = jax.nn.log_softmax(last.astype(jnp.float32), axis=-1)
-        lp_model = jnp.take_along_axis(full_lp, tok[:, None],
-                                       axis=-1)[:, 0]
-        lp_model = jnp.where(done, 0.0, lp_model)
+        lp_model = jnp.where(done, 0.0, _model_logp(last, tok))
         new_logits, cache = decode_step(cfg, params, cache, tok, pos,
                                         memory=memory)
         done = done | (tok == EOS)
         return (cache, new_logits, done, pos + 1), (tok, lp_model, valid)
 
-    keys = jax.random.split(key, max_new)
     (_, _, done, _), (toks, lps, valid) = jax.lax.scan(
-        step, (cache, last, jnp.zeros((b,), bool), jnp.int32(tp)), keys)
+        step, (cache, last, jnp.zeros((b,), bool), jnp.int32(tp)),
+        jnp.arange(max_new))
     completions = toks.T                        # (B, max_new)
     sampler_lp = lps.T
     comp_mask = valid.T.astype(jnp.float32)
     return completions, sampler_lp, comp_mask
 
 
+# --------------------------------------------------------------------------
+# continuous-batching engine: slot pool + paged KV cache
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(2,))
+def _prefill_chunk_jit(cfg: ModelConfig, params, pool, page_row, tokens,
+                       start):
+    """One chunk of one request's prompt: tokens (1, C) at positions
+    ``start + [0, C)``, K/V scattered into the request's pages. Returns
+    (logits (C, V), pool)."""
+    c = tokens.shape[1]
+    positions = start + jnp.arange(c, dtype=jnp.int32)[None, :]
+    logits, pool, _ = forward(cfg, params, tokens, positions=positions,
+                              cache=pool, page_table=page_row)
+    return logits[0], pool
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "rl", "vocab_limit",
+                                             "sync_every"),
+                   donate_argnums=(3,))
+def _decode_chunk_jit(cfg: ModelConfig, rl: RLConfig, params, pool,
+                      page_table, last, pos, active, req_keys, gen0,
+                      max_new_v, vocab_limit: int, sync_every: int):
+    """``sync_every`` decode steps over every slot in one executable — the
+    decode horizon that amortizes host dispatch; the scheduler regains
+    control (EOS recycling, admission) only between chunks.
+
+    Slots that finish mid-chunk (EOS / token budget) keep decoding PAD at
+    position 0 — within their own first page, or the scratch page for
+    empty slots — so the batch shape stays fixed and no live KV is ever
+    touched. Draw ``i`` of slot ``s`` uses fold_in(req_keys[s], gen0[s]+i):
+    the host discards post-EOS draws, and earlier draws are bit-identical
+    to the static engine's.
+    """
+    def step(carry, i):
+        pool, last, done = carry
+        over = (gen0 + i) >= max_new_v              # token budget exhausted
+        dead = done | over
+        lg = _mask_vocab(last, vocab_limit)
+        kt = jax.vmap(jax.random.fold_in)(req_keys, gen0 + i)
+        tok, _, _ = sample_token_rows(kt, lg, temperature=rl.temperature,
+                                      top_k=rl.top_k, top_p=rl.top_p)
+        lp = jnp.where(dead, 0.0, _model_logp(last, tok))
+        tok = jnp.where(dead, PAD, tok)
+        step_pos = jnp.where(dead, 0, pos + i)
+        new_last, pool = decode_step(cfg, params, pool, tok, step_pos,
+                                     page_table=page_table)
+        done = done | (tok == EOS)
+        return (pool, new_last, done), (tok, lp)
+
+    (pool, last, _), (toks, lps) = jax.lax.scan(
+        step, (pool, last, ~active), jnp.arange(sync_every))
+    return toks, lps, last, pool                    # toks (K, num_slots)
+
+
+def generate_continuous(cfg: ModelConfig, rl: RLConfig, params,
+                        prompts: jax.Array, key: jax.Array, *,
+                        max_new: Optional[int] = None,
+                        vocab_limit: Optional[int] = None,
+                        num_slots: Optional[int] = None,
+                        page_size: int = 16,
+                        prefill_chunk: Optional[int] = None,
+                        prompt_lens: Optional[Sequence[int]] = None,
+                        sync_every: int = 8,
+                        ) -> Dict[str, jax.Array]:
+    """Continuous-batching generation over ``prompts`` (B, Tp).
+
+    Drop-in for the static path: same rollout dict, same tokens/logps for
+    the same ``key`` (per-request RNG streams). Extras: ``num_slots``
+    decode slots are recycled as requests finish, ``prompt_lens`` admits
+    per-request true prompt lengths (rows shorter than Tp),
+    ``prefill_chunk`` bounds how much prompt is prefilled between decode
+    chunks (defaults to the whole prompt in one chunk), and ``sync_every``
+    is the decode horizon: jitted decode steps per scheduler sync (larger
+    amortizes dispatch, smaller recycles slots sooner).
+    """
+    if not paged_cache_supported(cfg):
+        raise ValueError(f"{cfg.name}: continuous engine needs an "
+                         "attention-only decode cache (no enc-dec / "
+                         "ring-KV / modality memory)")
+    max_new = max_new or rl.max_new_tokens
+    vocab_limit = vocab_limit or cfg.padded_vocab
+    prompts_np = np.asarray(prompts)
+    b, tp = prompts_np.shape
+    num_slots = min(b, num_slots or 8)
+    prefill_chunk = min(tp, prefill_chunk or tp)
+
+    pages_per_slot = pages_for(tp + max_new, page_size)
+    num_pages = 1 + num_slots * pages_per_slot       # + scratch page 0
+    pool = init_paged_pool(cfg, num_pages, page_size)
+    sched = ContinuousScheduler(num_slots, pages_per_slot, page_size,
+                                PageAllocator(num_pages))
+    for r in range(b):
+        plen = int(prompt_lens[r]) if prompt_lens is not None else tp
+        if not 0 < plen <= tp:
+            raise ValueError(f"prompt_lens[{r}]={plen} outside (0, {tp}]")
+        sched.submit(GenRequest(rid=r,
+                                prompt=prompts_np[r, :plen].astype(np.int32),
+                                max_new=max_new))
+
+    last = jnp.zeros((num_slots, cfg.padded_vocab), jnp.float32)
+    pos_np = np.zeros((num_slots,), np.int32)
+    active_np = np.zeros((num_slots,), bool)
+    gen_np = np.zeros((num_slots,), np.int32)
+    max_new_np = np.full((num_slots,), max_new, np.int32)
+    req_keys_np = np.zeros((num_slots, 2), np.uint32)   # threefry key data
+
+    while not sched.all_done:
+        sched.admit()
+
+        # chunked prefill: every prefilling slot advances one chunk per
+        # iteration, interleaved with the decode chunks below
+        for pref in [r for r in sched.slots
+                     if r is not None and r.state == PREFILL]:
+            c0 = pref.prefill_pos
+            chunk = pref.prompt[c0:c0 + prefill_chunk]
+            if chunk.shape[0] < prefill_chunk:          # pad to fixed shape
+                chunk = np.concatenate(
+                    [chunk, np.full(prefill_chunk - chunk.shape[0], PAD,
+                                    np.int32)])
+            page_row = jnp.asarray(
+                sched.block_table[pref.slot:pref.slot + 1])
+            logits_c, pool = _prefill_chunk_jit(
+                cfg, params, pool, page_row, jnp.asarray(chunk[None]),
+                jnp.int32(c0))
+            sched.stats["prefill_chunks"] += 1
+            pref.prefill_pos = min(pref.prompt_len, c0 + prefill_chunk)
+            if pref.prefill_pos >= pref.prompt_len:     # prompt fully cached
+                s = pref.slot
+                last = last.at[s].set(logits_c[pref.prompt_len - 1 - c0])
+                pref.state = DECODE
+                active_np[s], pos_np[s], gen_np[s] = True, pref.prompt_len, 0
+                max_new_np[s] = pref.max_new
+                req_keys_np[s] = np.asarray(
+                    jax.random.fold_in(key, pref.rid), np.uint32)
+
+        dec = sched.decoding()
+        if not dec:
+            continue
+        # non-decoding slots (empty, or mid-prefill) must scatter their
+        # dead PAD writes into the scratch page — NOT position 0 of pages
+        # a prefilling request has already filled.
+        bt = sched.block_table.copy()
+        bt[~active_np] = SCRATCH_PAGE
+        toks, lps, last, pool = _decode_chunk_jit(
+            cfg, rl, params, pool, jnp.asarray(bt), last,
+            jnp.asarray(pos_np), jnp.asarray(active_np),
+            jnp.asarray(req_keys_np), jnp.asarray(gen_np),
+            jnp.asarray(max_new_np), vocab_limit, sync_every)
+        sched.stats["decode_steps"] += sync_every
+        tok_np, lp_np = np.asarray(toks), np.asarray(lps)
+        for r in dec:
+            for i in range(sync_every):
+                if r.gen_count >= r.max_new:
+                    break
+                t = int(tok_np[i, r.slot])
+                r.tokens.append(t)
+                r.logps.append(float(lp_np[i, r.slot]))
+                sched.stats["decode_slot_steps"] += 1
+                if t == EOS:
+                    break
+            pos_np[r.slot] = r.next_pos
+            gen_np[r.slot] = r.gen_count
+            if r.tokens and r.tokens[-1] == EOS:
+                active_np[r.slot] = False
+                sched.finish(r, "eos")
+            elif r.gen_count >= r.max_new:
+                active_np[r.slot] = False
+                sched.finish(r, "length")
+
+    completions = np.full((b, max_new), PAD, np.int32)
+    sampler_lp = np.zeros((b, max_new), np.float32)
+    comp_mask = np.zeros((b, max_new), np.float32)
+    for req in sched.finished:
+        n = req.gen_count
+        completions[req.rid, :n] = req.tokens
+        sampler_lp[req.rid, :n] = req.logps
+        comp_mask[req.rid, :n] = 1.0
+    tokens = np.concatenate([prompts_np, completions], axis=1)
+    return {"tokens": jnp.asarray(tokens),
+            "completions": jnp.asarray(completions),
+            "sampler_lp": jnp.asarray(sampler_lp),
+            "comp_mask": jnp.asarray(comp_mask),
+            "prompt_len": tp,
+            "stats": dict(sched.stats,
+                          slot_utilization=sched.slot_utilization())}
+
+
+# --------------------------------------------------------------------------
+# dispatch
+
+
 def generate(cfg: ModelConfig, rl: RLConfig, params, prompts: jax.Array,
              key: jax.Array, *, max_new: Optional[int] = None,
              vocab_limit: Optional[int] = None,
-             memory: Optional[jax.Array] = None) -> Dict[str, jax.Array]:
+             memory: Optional[jax.Array] = None,
+             engine: Optional[str] = None,
+             **continuous_kwargs) -> Dict[str, jax.Array]:
     """Returns a rollout dict:
     tokens (B, Tp+max_new) | completions (B, max_new) |
     sampler_lp (B, max_new) engine-side logps | comp_mask (B, max_new).
+
+    ``engine`` (default ``rl.engine``) picks the static scan or the
+    continuous-batching slot pool; architectures the paged cache can't
+    serve (SSM/enc-dec/ring-KV/modality memory) fall back to static with
+    a warning.
     """
+    engine = engine or rl.engine
+    if engine not in ("static", "continuous"):
+        raise ValueError(f"unknown engine {engine!r}")
+    if engine == "static" and continuous_kwargs:
+        # don't silently ignore num_slots=… etc. on the static path
+        raise TypeError("static engine takes no continuous-engine kwargs: "
+                        f"{sorted(continuous_kwargs)}")
     max_new = max_new or rl.max_new_tokens
     vocab_limit = vocab_limit or cfg.padded_vocab
+    if engine == "continuous":
+        if memory is None and paged_cache_supported(cfg):
+            return generate_continuous(cfg, rl, params, prompts, key,
+                                       max_new=max_new,
+                                       vocab_limit=vocab_limit,
+                                       **continuous_kwargs)
+        dropped = (f"; ignoring {sorted(continuous_kwargs)}"
+                   if continuous_kwargs else "")
+        warnings.warn(f"{cfg.name}: continuous engine unsupported for this "
+                      f"architecture/memory setup; falling back to "
+                      f"static{dropped}", stacklevel=2)
     completions, sampler_lp, comp_mask = _generate_jit(
         cfg, rl, params, prompts, key, max_new, vocab_limit, memory)
     tokens = jnp.concatenate([prompts, completions], axis=1)

@@ -2,6 +2,8 @@
 App. B.5.2)."""
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -45,3 +47,17 @@ def sample_token(key: jax.Array, logits: jax.Array, *,
     filt_lp = jax.nn.log_softmax(filt, axis=-1)
     lp_filt = jnp.take_along_axis(filt_lp, tok[..., None], axis=-1)[..., 0]
     return tok, lp_filt, lp_model
+
+
+def sample_token_rows(keys: jax.Array, logits: jax.Array, *,
+                      temperature: float = 1.0, top_k: int = 0,
+                      top_p: float = 1.0):
+    """Row-independent sampling: row ``r`` of ``logits`` (B, V) is drawn
+    with its own ``keys[r]``. Because a row's draw depends only on its own
+    (key, logits) — never on where it sits in the batch — the static and
+    continuous-batching engines produce identical tokens for a request
+    regardless of slot placement. Returns the same triple as
+    ``sample_token``, each (B,)."""
+    fn = functools.partial(sample_token, temperature=temperature,
+                           top_k=top_k, top_p=top_p)
+    return jax.vmap(fn)(keys, logits)

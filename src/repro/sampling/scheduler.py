@@ -1,0 +1,145 @@
+"""Request scheduler for the continuous-batching engine.
+
+Lifecycle: QUEUED → PREFILL → DECODE → DONE. A fixed pool of decode
+slots is recycled: admission binds a queued request to a free slot and
+allocates its KV pages; finishing (EOS / token budget) frees both
+immediately so the next queued prompt takes over mid-batch — no slot ever
+pads out a ``lax.scan`` to the global ``max_new``.
+
+The scheduler is pure host-side bookkeeping (numpy block table, python
+queue); all device work stays in ``engine.py``'s jitted step functions.
+Per-request engine log-probs are kept as *metadata* for the learner's
+recompute path (App. B.1), mirroring the static engine's contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
+
+from repro.sampling.paged_cache import (PageAllocator, SCRATCH_PAGE,
+                                        new_block_table, pages_for)
+
+QUEUED, PREFILL, DECODE, DONE = "queued", "prefill", "decode", "done"
+
+
+@dataclasses.dataclass
+class GenRequest:
+    """One generation request moving through the slot pool."""
+    rid: int                      # row id; also the RNG fold_in stream
+    prompt: np.ndarray            # (Tp,) int32 true prompt tokens
+    max_new: int
+    state: str = QUEUED
+    slot: int = -1
+    pages: List[int] = dataclasses.field(default_factory=list)
+    prefill_pos: int = 0          # prompt tokens already prefilled
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    logps: List[float] = dataclasses.field(default_factory=list)
+    finish_reason: str = ""       # "eos" | "length"
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def gen_count(self) -> int:
+        return len(self.tokens)
+
+    @property
+    def total_len(self) -> int:
+        return self.prompt_len + self.max_new
+
+    @property
+    def next_pos(self) -> int:
+        """Next KV write position (prompt length + generated so far)."""
+        return self.prompt_len + self.gen_count
+
+
+class ContinuousScheduler:
+    """Admission + slot/page recycling over a fixed slot pool."""
+
+    def __init__(self, num_slots: int, pages_per_slot: int, page_size: int,
+                 allocator: PageAllocator) -> None:
+        self.num_slots = num_slots
+        self.pages_per_slot = pages_per_slot
+        self.page_size = page_size
+        self.allocator = allocator
+        self.block_table = new_block_table(num_slots, pages_per_slot)
+        self.slots: List[Optional[GenRequest]] = [None] * num_slots
+        self.queue: Deque[GenRequest] = deque()
+        self.finished: List[GenRequest] = []
+        self.stats: Dict[str, int] = {
+            "submitted": 0, "admitted": 0, "completed": 0,
+            "max_active": 0, "decode_steps": 0, "decode_slot_steps": 0,
+            "prefill_chunks": 0,
+        }
+
+    # ------------------------------------------------------------------
+    def submit(self, req: GenRequest) -> None:
+        assert req.state == QUEUED
+        self.stats["submitted"] += 1
+        self.queue.append(req)
+
+    def admit(self) -> List[GenRequest]:
+        """FIFO admission: bind queued requests to free slots while pages
+        last. Returns the newly admitted requests (state PREFILL)."""
+        newly: List[GenRequest] = []
+        for s in range(self.num_slots):
+            if not self.queue:
+                break
+            if self.slots[s] is not None:
+                continue
+            req = self.queue[0]
+            need = pages_for(req.total_len, self.page_size)
+            if need > self.pages_per_slot:
+                raise ValueError(
+                    f"request {req.rid}: {req.total_len} tokens need {need} "
+                    f"pages > pages_per_slot={self.pages_per_slot}")
+            pages = self.allocator.alloc(need)
+            if pages is None:             # pool exhausted — wait for frees
+                break
+            self.queue.popleft()
+            req.state, req.slot, req.pages = PREFILL, s, pages
+            self.block_table[s, :need] = pages
+            self.block_table[s, need:] = SCRATCH_PAGE
+            self.slots[s] = req
+            newly.append(req)
+            self.stats["admitted"] += 1
+        self.stats["max_active"] = max(self.stats["max_active"],
+                                       sum(r is not None for r in self.slots))
+        return newly
+
+    def finish(self, req: GenRequest, reason: str) -> None:
+        """Release the request's slot and pages back to the pool."""
+        assert req.state in (PREFILL, DECODE)
+        self.allocator.free(req.pages)
+        req.pages = []
+        self.block_table[req.slot] = SCRATCH_PAGE
+        self.slots[req.slot] = None
+        req.state, req.finish_reason = DONE, reason
+        self.finished.append(req)
+        self.stats["completed"] += 1
+
+    # ------------------------------------------------------------------
+    def next_prefill(self) -> Optional[GenRequest]:
+        for r in self.slots:
+            if r is not None and r.state == PREFILL:
+                return r
+        return None
+
+    def decoding(self) -> List[GenRequest]:
+        return [r for r in self.slots if r is not None and r.state == DECODE]
+
+    @property
+    def all_done(self) -> bool:
+        return not self.queue and all(r is None for r in self.slots)
+
+    def slot_utilization(self) -> float:
+        """Fraction of decode-step slot positions that carried a live
+        request — the headline efficiency number for serving."""
+        steps = self.stats["decode_steps"]
+        if steps == 0:
+            return 0.0
+        return self.stats["decode_slot_steps"] / (steps * self.num_slots)

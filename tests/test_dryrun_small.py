@@ -47,8 +47,9 @@ SCRIPT = textwrap.dedent("""
         ).lower(state, batch).compile()
     hlo = compiled.as_text()
     assert "all-reduce" in hlo or "all-gather" in hlo
-    print(json.dumps({{"ok": True,
-                       "flops": compiled.cost_analysis().get("flops", 0)}}))
+    from repro.launch.roofline import normalize_cost_analysis
+    ca = normalize_cost_analysis(compiled.cost_analysis())
+    print(json.dumps({{"ok": True, "flops": ca.get("flops", 0)}}))
 """)
 
 

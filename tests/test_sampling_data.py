@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st   # hypothesis, or skip-shim without it
 
 from repro.config import ModelConfig, RLConfig, ATTN, MLP
 from repro.data import (ArithmeticTask, PromptPipeline, Tokenizer,

@@ -2,7 +2,7 @@
 Fig. 2 variance claims."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st   # hypothesis, or skip-shim without it
 
 from repro.core import theory
 
