@@ -26,11 +26,13 @@ MODULES = [
     ("table13", "benchmarks.table13_ablation"),
     ("hyperparams", "benchmarks.hyperparams"),
     ("serve", "benchmarks.serve_throughput"),
+    ("logprob", "benchmarks.logprob_bench"),
 ]
 
 # modules cheap enough for the CI smoke job ("serve" stays out: CI
-# exercises benchmarks.serve_throughput --smoke as its own step)
-SMOKE_MODULES = ("fig2", "theory")
+# exercises benchmarks.serve_throughput --smoke as its own step;
+# "logprob" rides here so the CI benchmark-smoke covers the hot path)
+SMOKE_MODULES = ("fig2", "theory", "logprob")
 
 
 def main() -> None:

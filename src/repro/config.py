@@ -228,6 +228,13 @@ class TrainConfig:
     grad_clip: float = 1.0
     grad_accum: int = 1
     seed: int = 0
+    # Learner-side log-prob implementation (the RL hot path):
+    #   "fused"   — auto-dispatch repro.kernels.ops.fused_token_logprob
+    #               (Pallas TPU kernel, chunked lax.map elsewhere); no
+    #               V-sized f32 activation in forward or backward.
+    #   "pallas" | "chunked" — force one fused backend.
+    #   "naive"   — materializing log-softmax (repro.core.logprob).
+    logprob_impl: str = "fused"
 
 
 @dataclass(frozen=True)

@@ -4,8 +4,18 @@
 all-gather the full vocabulary (tens of GB at RL shapes). The masked-sum
 formulation below keeps every op elementwise/reduction along the sharded
 vocab axis, so the only cross-device traffic is an all-reduce of (B, S)
-scalars. On TPU the ``repro.kernels.fused_logprob`` Pallas kernel computes
-the same quantity without materializing log-softmax at all.
+scalars. These are the *materializing* reference implementations; the
+training hot path dispatches to ``repro.kernels.ops.fused_token_logprob``
+(Pallas on TPU, chunked ``lax.map`` elsewhere), which computes identical
+values and gradients without a V-sized f32 activation in either pass.
+
+Target-id contract (shared with the fused kernels): target ids are
+clamped to [0, V) before the gather. Padded positions conventionally
+carry arbitrary ids (0, -1, a tokenizer PAD beyond the model vocab, ...)
+and are excluded by the loss mask — with the clamp they yield the
+(finite, well-defined) log-prob of a valid token rather than silently
+degenerating to −logsumexp(logits), which used to poison any unmasked
+reduction and every naive↔fused parity check.
 """
 from __future__ import annotations
 
@@ -15,27 +25,46 @@ import jax
 import jax.numpy as jnp
 
 
+def clamp_target_ids(targets: jax.Array, vocab: int) -> jax.Array:
+    """The shared target-id contract, in one place: ids clamp to
+    [0, vocab). Used by the naive helpers here, the fused kernels
+    (``repro.kernels.fused_logprob``) and the oracle (``kernels.ref``)."""
+    return jnp.clip(targets.astype(jnp.int32), 0, vocab - 1)
+
+
 def token_logprob_from_logits(logits: jax.Array, targets: jax.Array
                               ) -> jax.Array:
     """logits (B, S, V) [any dtype], targets (B, S) int32 -> (B, S) f32."""
     lg = logits.astype(jnp.float32)
     lse = jax.nn.logsumexp(lg, axis=-1)
-    v = lg.shape[-1]
+    tgt = clamp_target_ids(targets, lg.shape[-1])
     hit = jax.lax.broadcasted_iota(jnp.int32, lg.shape, lg.ndim - 1) \
-        == targets[..., None]
-    tgt = jnp.where(hit, lg, 0.0).sum(axis=-1)
-    return tgt - lse
+        == tgt[..., None]
+    tl = jnp.where(hit, lg, 0.0).sum(axis=-1)
+    return tl - lse
+
+
+def token_logprob_entropy_lse(logits: jax.Array, targets: jax.Array
+                              ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """(logp, entropy, lse) triple over the last axis, all f32 — the
+    single source of truth for the masked-sum log-prob/entropy math:
+    used whole-array here and chunk-at-a-time by the fused kernels'
+    fallback (``repro.kernels.fused_logprob._chunk_fwd``), whose custom
+    VJP saves the ``lse`` residual."""
+    lg = logits.astype(jnp.float32)
+    m = lg.max(axis=-1)
+    p_un = jnp.exp(lg - m[..., None])
+    l = jnp.maximum(p_un.sum(axis=-1), 1e-30)
+    lse = m + jnp.log(l)
+    tgt = clamp_target_ids(targets, lg.shape[-1])
+    hit = jax.lax.broadcasted_iota(jnp.int32, lg.shape, lg.ndim - 1) \
+        == tgt[..., None]
+    tl = jnp.where(hit, lg, 0.0).sum(axis=-1)
+    ent = lse - (p_un * lg).sum(-1) / l
+    return tl - lse, ent, lse
 
 
 def token_logprob_and_entropy(logits: jax.Array, targets: jax.Array
                               ) -> Tuple[jax.Array, jax.Array]:
-    lg = logits.astype(jnp.float32)
-    m = lg.max(axis=-1, keepdims=True)
-    p_un = jnp.exp(lg - m)
-    l = p_un.sum(axis=-1)
-    lse = m[..., 0] + jnp.log(l)
-    hit = jax.lax.broadcasted_iota(jnp.int32, lg.shape, lg.ndim - 1) \
-        == targets[..., None]
-    tgt = jnp.where(hit, lg, 0.0).sum(axis=-1)
-    ent = lse - (p_un * lg).sum(-1) / l
-    return tgt - lse, ent
+    lp, ent, _ = token_logprob_entropy_lse(logits, targets)
+    return lp, ent

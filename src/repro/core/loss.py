@@ -19,7 +19,7 @@ Everything returns rich metrics so the stability diagnostics of Fig. 4/5
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -59,8 +59,14 @@ def policy_loss(rl: RLConfig,
                 sampler_lp: jax.Array,
                 mask: jax.Array,
                 advantages: jax.Array,
+                entropy: Optional[jax.Array] = None,
                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """learner_lp/sampler_lp/mask: (B,T); advantages: (B,).
+
+    ``entropy`` (B,T), when provided (the fused-logprob path computes it
+    in the same vocab sweep as the log-probs), feeds the
+    ``entropy_bonus`` term with the *true* policy entropy H(p(·|x_<t));
+    without it the bonus falls back to the −log p(y_t) surrogate.
 
     Returns (scalar loss, metrics).
     """
@@ -124,8 +130,11 @@ def policy_loss(rl: RLConfig,
     if rl.beta_kl > 0.0:
         loss = loss + rl.beta_kl * kl
     if rl.entropy_bonus > 0.0:
-        # entropy surrogate on sampled tokens
-        loss = loss - rl.entropy_bonus * _masked_mean(-learner_lp, mask)
+        if entropy is not None:
+            loss = loss - rl.entropy_bonus * _masked_mean(entropy, mask)
+        else:
+            # entropy surrogate on sampled tokens
+            loss = loss - rl.entropy_bonus * _masked_mean(-learner_lp, mask)
 
     # --- stability diagnostics (Fig. 4/5) --------------------------------
     est = (w_seq * adv).mean()          # Monte-Carlo E_q[w·A]; E_p[A] ≈ 0
@@ -140,4 +149,6 @@ def policy_loss(rl: RLConfig,
         "adv_mean": adv.mean(),
         "adv_std": adv.std(),
     }
+    if entropy is not None:
+        metrics["entropy"] = sg(_masked_mean(entropy, mask))
     return loss, metrics

@@ -52,7 +52,8 @@ class SamplerNode:
                  pipeline: PromptPipeline, task: ArithmeticTask,
                  tok: Tokenizer, params: Any, store: PolicyStore,
                  hcfg: HeteroConfig, seed: int,
-                 engine: Optional[str] = None) -> None:
+                 engine: Optional[str] = None,
+                 logprob_impl: str = "fused") -> None:
         self.sid = sid
         self.cfg, self.rl = cfg, rl
         self.pipeline, self.task, self.tok = pipeline, task, tok
@@ -60,6 +61,9 @@ class SamplerNode:
         self.store = store
         self.hcfg = hcfg
         self.engine = engine or rl.engine
+        # backend of the App. B.1 recompute — follows the learner's
+        # TrainConfig.logprob_impl so A/B runs switch both halves
+        self.logprob_impl = logprob_impl
         self.version = 0
         self.rng = np.random.default_rng(seed)
         self.key = jax.random.PRNGKey(seed)
@@ -68,14 +72,26 @@ class SamplerNode:
         # operator telemetry: generation rate of this node (the service
         # rate of the rollout queue in the HeteroRL picture) plus the
         # last rollout's engine stats, exposed via tokens_per_s below.
+        # The first generate call pays jit compilation; it is accounted
+        # separately (warmup_*) so tokens_per_s reports the steady-state
+        # rate — the same convention as benchmarks/serve_throughput.py,
+        # which warms executables outside the timed region.
         self.tokens_generated = 0
         self.gen_seconds = 0.0
+        self.warmup_tokens = 0
+        self.warmup_seconds = 0.0
         self.engine_stats: Dict[str, float] = {}
 
     @property
     def tokens_per_s(self) -> float:
-        return self.tokens_generated / self.gen_seconds \
-            if self.gen_seconds else 0.0
+        """Steady-state generation rate (first-call compile excluded);
+        falls back to the warmup-inclusive rate until a second batch has
+        been generated."""
+        if self.gen_seconds:
+            return self.tokens_generated / self.gen_seconds
+        if self.warmup_seconds:
+            return self.warmup_tokens / self.warmup_seconds
+        return 0.0
 
     def generate_batch(self, now_s: float) -> RolloutBatch:
         req = self.pipeline.next_batch()
@@ -84,8 +100,14 @@ class SamplerNode:
         t0 = time.perf_counter()
         roll = generate(self.cfg, self.rl, self.params, prompts, k,
                         vocab_limit=self.tok.vocab_size, engine=self.engine)
-        self.tokens_generated += int(np.asarray(roll["comp_mask"]).sum())
-        self.gen_seconds += time.perf_counter() - t0
+        ntok = int(np.asarray(roll["comp_mask"]).sum())
+        dt = time.perf_counter() - t0
+        if self.batches_generated == 0:         # jit compile folded in
+            self.warmup_tokens += ntok
+            self.warmup_seconds += dt
+        else:
+            self.tokens_generated += ntok
+            self.gen_seconds += dt
         if "stats" in roll:
             self.engine_stats = dict(roll["stats"])
         rewards = score_rollouts(self.task, self.tok, req.problems,
@@ -95,7 +117,8 @@ class SamplerNode:
         if self.rl.recompute_sampler_logps:
             # App. B.1: engine logps are untrusted; do a dedicated
             # forward pass under the *sampler's own* parameters.
-            lp = token_logps(self.cfg, self.params, roll["tokens"])
+            lp = token_logps(self.cfg, self.params, roll["tokens"],
+                             logprob_impl=self.logprob_impl)
             comp_lp = lp[:, tp - 1:]
         else:
             comp_lp = roll["sampler_lp"]

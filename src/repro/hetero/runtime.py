@@ -55,7 +55,8 @@ class HeteroRuntime:
                         PromptPipeline(task, tok, prompts_per_batch,
                                        rl.group_size),
                         task, tok, state.params, self.store, hcfg,
-                        seed=hcfg.seed * 1000 + i)
+                        seed=hcfg.seed * 1000 + i,
+                        logprob_impl=tc.logprob_impl)
             for i in range(hcfg.num_samplers)
         ]
         self._learner_busy = False
@@ -127,7 +128,8 @@ def run_online(cfg: ModelConfig, rl: RLConfig, tc: TrainConfig,
     learner = LearnerNode(cfg, rl, tc, hcfg, state, store)
     pipeline = PromptPipeline(task, tok, prompts_per_batch, rl.group_size)
     sampler = SamplerNode(0, cfg, rl, pipeline, task, tok,
-                          learner.state.params, store, hcfg, seed=seed)
+                          learner.state.params, store, hcfg, seed=seed,
+                          logprob_impl=tc.logprob_impl)
     eval_scores: List[float] = []
     for step in range(num_steps):
         sampler.params = learner.state.params       # strict synchrony

@@ -43,7 +43,8 @@ class ThreadedHeteroRuntime:
                         PromptPipeline(task, tok, prompts_per_batch,
                                        rl.group_size),
                         task, tok, state.params, self.store, hcfg,
-                        seed=hcfg.seed * 1000 + i)
+                        seed=hcfg.seed * 1000 + i,
+                        logprob_impl=tc.logprob_impl)
             for i in range(hcfg.num_samplers)
         ]
         self._stop = threading.Event()

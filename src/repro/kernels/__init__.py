@@ -3,6 +3,8 @@ SSD chunk scan, fused RL token-logprob/entropy). Each has a pure-jnp
 oracle in ``ref.py``; ``ops.py`` exposes jit'd wrappers that run
 interpret-mode on CPU and Mosaic-compiled on TPU."""
 from repro.kernels import ops, ref
-from repro.kernels.ops import flash_attention, fused_logprob, ssd_scan
+from repro.kernels.ops import (flash_attention, fused_logprob,
+                               fused_token_logprob, ssd_scan)
 
-__all__ = ["ops", "ref", "flash_attention", "ssd_scan", "fused_logprob"]
+__all__ = ["ops", "ref", "flash_attention", "ssd_scan", "fused_logprob",
+           "fused_token_logprob"]

@@ -11,10 +11,12 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention as _flash
-from repro.kernels.fused_logprob import fused_logprob as _fused_logprob
+from repro.kernels.fused_logprob import (chunked_logprob as _chunked_logprob,
+                                         fused_logprob as _fused_logprob)
 from repro.kernels.ssd_scan import ssd_scan as _ssd_scan
 
 
@@ -48,3 +50,78 @@ def fused_logprob(logits, targets, *, block_t: int = 256,
     interp = (not on_tpu()) if interpret is None else interpret
     return _fused_logprob(logits, targets, block_t=block_t, block_v=block_v,
                           interpret=interp)
+
+
+def _largest_divisor(n: int, cap: int, mult: int) -> int:
+    """Largest d ≤ cap with n % d == 0 and d % mult == 0 (0 if none) —
+    picks a Pallas tile size that exactly divides real model shapes
+    (padded vocabs are 256-aligned, not block_v-aligned; token counts
+    are B·(S−1))."""
+    for d in range(min(cap, n) - min(cap, n) % mult, 0, -mult):
+        if n % d == 0:
+            return d
+    return 0
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "block_t", "block_v",
+                                             "chunk", "interpret"))
+def fused_token_logprob(logits, targets, *, impl: Optional[str] = None,
+                        block_t: int = 256, block_v: int = 2048,
+                        chunk: int = 256,
+                        interpret: Optional[bool] = None):
+    """Training-stack entry for memory-bounded token log-probs.
+
+    logits (..., V) [any float dtype], targets (...,) int ->
+    (logp (...,), entropy (...,)), both f32 — differentiable w.r.t.
+    ``logits`` with a streaming backward (no V-sized f32 activation in
+    either pass; see ``repro.kernels.fused_logprob``).
+
+    ``impl`` selects the backend:
+      - None (default): Pallas on TPU, chunked pure-JAX elsewhere;
+      - "pallas" / "chunked": forced (pallas still falls back to
+        chunked when T or V doesn't divide by the block sizes);
+      - "naive": the materializing log-softmax reference
+        (``repro.core.logprob``) — for A/B benchmarks and debugging.
+
+    Out-of-range target ids are clamped to [0, V) (masked positions may
+    carry any id — the padding contract of ``repro.core.logprob``).
+    """
+    from repro.core.logprob import token_logprob_and_entropy
+    if impl not in (None, "pallas", "chunked", "naive"):
+        raise ValueError(f"unknown logprob impl {impl!r}")
+    if impl == "naive":
+        return token_logprob_and_entropy(logits, targets)
+    if impl is None:
+        impl = "pallas" if on_tpu() else "chunked"
+    if logits.ndim == 1:                       # single token, no batch dim
+        lp, ent = fused_token_logprob(
+            logits[None], targets.reshape((1,)), impl=impl,
+            block_t=block_t, block_v=block_v, chunk=chunk,
+            interpret=interpret)
+        return lp.reshape(targets.shape), ent.reshape(targets.shape)
+    lead, v = logits.shape[:-1], logits.shape[-1]
+    if impl == "pallas":
+        # the kernel takes flat (T, V); shrink the tiles to the largest
+        # hardware-aligned divisors of the actual shape (t = B·(S−1) and
+        # 256-aligned padded vocabs rarely divide the default blocks).
+        # NOTE pallas_call has no GSPMD partitioning rules: on a
+        # multi-device mesh, call this under shard_map so the kernel
+        # sees per-device (T, V) shards — under plain GSPMD the flatten
+        # below would merge a data-sharded batch axis into the token
+        # axis and replicate the logits. The chunked branch is
+        # GSPMD-native (shard-local token-axis slices) and is what the
+        # CPU dry-run grid lowers.
+        t = int(np.prod(lead))
+        bt = _largest_divisor(t, block_t, 8) or (t if t < 8 else 0)
+        bv = _largest_divisor(v, block_v, 128) or (v if v < 128 else 0)
+        if bt and bv:
+            interp = (not on_tpu()) if interpret is None else interpret
+            lp, ent = _fused_logprob(logits.reshape((-1, v)),
+                                     targets.reshape((-1,)),
+                                     block_t=bt, block_v=bv,
+                                     interpret=interp)
+            return lp.reshape(lead), ent.reshape(lead)
+    # chunked keeps the (..., T, V) layout: the token axis is chunked in
+    # place so data-sharded batch axes never get flattened into the
+    # sliced axis (GSPMD would otherwise replicate the whole logits)
+    return _chunked_logprob(logits, targets, chunk=chunk)

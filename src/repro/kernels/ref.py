@@ -28,8 +28,11 @@ def ssd_scan_ref(x, dt, a_log_neg, b, c):
 
 def fused_logprob_ref(logits: jax.Array, targets: jax.Array
                       ) -> Tuple[jax.Array, jax.Array]:
+    from repro.core.logprob import clamp_target_ids
     lg = logits.astype(jnp.float32)
     lp = jax.nn.log_softmax(lg, axis=-1)
-    logp = jnp.take_along_axis(lp, targets[:, None], axis=-1)[:, 0]
+    # shared target-id contract: out-of-range ids (padding) clamp to [0, V)
+    tgt = clamp_target_ids(targets, lg.shape[-1])
+    logp = jnp.take_along_axis(lp, tgt[:, None], axis=-1)[:, 0]
     ent = -(jnp.exp(lp) * lp).sum(-1)
     return logp, ent

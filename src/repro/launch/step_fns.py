@@ -47,6 +47,11 @@ def grad_accum_for(cfg: ModelConfig) -> int:
 
 
 def make_train_fn(cfg: ModelConfig, rl: RLConfig, tc: TrainConfig):
+    """RL train step for the launcher/dry-run grid. The learner-side
+    token-logprob backend follows ``tc.logprob_impl`` (default "fused":
+    the streaming ``repro.kernels.ops.fused_token_logprob`` dispatch —
+    Pallas on TPU, chunked ``lax.map`` on the CPU dry-run — so the
+    lowered step never materializes a (B·T, V) f32 log-softmax)."""
     opt = optimizer_for(cfg)
 
     def step(state: TrainState, batch: Dict[str, jax.Array]):

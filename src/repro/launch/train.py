@@ -86,6 +86,10 @@ def main() -> None:
     ap.add_argument("--num-samplers", type=int, default=4)
     ap.add_argument("--beta-kl", type=float, default=None)
     ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--logprob-impl", default="fused",
+                    choices=["fused", "pallas", "chunked", "naive"],
+                    help="learner token-logprob backend (see "
+                         "TrainConfig.logprob_impl)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--eval-every", type=int, default=10)
     ap.add_argument("--out", default=None)
@@ -103,7 +107,8 @@ def main() -> None:
 
     key = jax.random.PRNGKey(args.seed)
     params = init_params(cfg, key)
-    tc_sft = TrainConfig(learning_rate=1e-2, total_steps=args.sft_steps)
+    tc_sft = TrainConfig(learning_rate=1e-2, total_steps=args.sft_steps,
+                         logprob_impl=args.logprob_impl)
     state = init_state(cfg, tc_sft, params)
     t0 = time.time()
     state, sft_loss = sft_warmstart(cfg, tc_sft, task, tok, state,
@@ -111,7 +116,8 @@ def main() -> None:
     print(f"[train] SFT warm start done: loss={sft_loss:.3f} "
           f"({time.time()-t0:.0f}s)")
 
-    tc = TrainConfig(learning_rate=args.lr, total_steps=args.steps)
+    tc = TrainConfig(learning_rate=args.lr, total_steps=args.steps,
+                     logprob_impl=args.logprob_impl)
     state = state._replace(step=jnp.zeros((), jnp.int32))
     eval_fn = make_eval_fn(cfg, rl, task, tok)
 

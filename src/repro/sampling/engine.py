@@ -330,12 +330,19 @@ def generate(cfg: ModelConfig, rl: RLConfig, params, prompts: jax.Array,
 
 
 def token_logps(cfg: ModelConfig, params, tokens: jax.Array, *,
-                memory: Optional[jax.Array] = None) -> jax.Array:
+                memory: Optional[jax.Array] = None,
+                logprob_impl: Optional[str] = None) -> jax.Array:
     """Teacher-forced log p(tokens[t] | tokens[<t]) -> (B, T-1).
 
-    On TPU this is served by the ``fused_logprob`` Pallas kernel (see
-    repro.kernels); this is the portable jnp path.
+    This is the App. B.1 untrusted-sampler recompute — the same hot path
+    as the learner's loss, so it dispatches to the fused streaming
+    kernel (Pallas on TPU, chunked ``lax.map`` elsewhere) instead of
+    materializing a (B·T, V) f32 log-softmax. ``logprob_impl`` takes the
+    ``TrainConfig.logprob_impl`` vocabulary ("pallas" | "chunked" |
+    "naive" to force a backend); None or "fused" auto-dispatches.
     """
-    from repro.core.logprob import token_logprob_from_logits
+    from repro.kernels.ops import fused_token_logprob
     logits, _, _ = forward(cfg, params, tokens[:, :-1], memory=memory)
-    return token_logprob_from_logits(logits, tokens[:, 1:])
+    impl = None if logprob_impl == "fused" else logprob_impl
+    lp, _ = fused_token_logprob(logits, tokens[:, 1:], impl=impl)
+    return lp

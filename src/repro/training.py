@@ -21,9 +21,26 @@ import jax.numpy as jnp
 from repro.config import ModelConfig, RLConfig, TrainConfig
 from repro.core import group_advantages, policy_loss
 from repro.core.logprob import token_logprob_from_logits
+from repro.kernels.ops import fused_token_logprob
 from repro.models import forward
 from repro.optim import (adafactor_init, adafactor_update, adamw_init,
                          adamw_update, clip_by_global_norm, warmup_schedule)
+
+# Metrics that aggregate across grad-accum microbatches with `max` rather
+# than a mean — averaging per-microbatch maxima would understate e.g. the
+# worst importance weight of the step (the Fig. 4 stability signal).
+MAX_METRICS = frozenset({"iw_max"})
+
+
+def _token_lp_ent(logits: jax.Array, targets: jax.Array, impl: str):
+    """(logp, entropy) per target token under the configured
+    ``TrainConfig.logprob_impl``; entropy is None on the naive path (it
+    would cost an extra full-vocab sweep there)."""
+    if impl == "naive":
+        return token_logprob_from_logits(logits, targets), None
+    fused_impl = None if impl == "fused" else impl
+    lp, ent = fused_token_logprob(logits, targets, impl=fused_impl)
+    return lp, ent
 
 
 class TrainState(NamedTuple):
@@ -41,7 +58,8 @@ def init_state(cfg: ModelConfig, tc: TrainConfig, params,
 
 def rl_loss_fn(cfg: ModelConfig, rl: RLConfig, params,
                batch: Dict[str, jax.Array],
-               memory: Optional[jax.Array] = None
+               memory: Optional[jax.Array] = None,
+               logprob_impl: str = "fused"
                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     # modality stubs ride in the batch so they micro-batch with it
     if memory is None and "frames" in batch:
@@ -51,7 +69,8 @@ def rl_loss_fn(cfg: ModelConfig, rl: RLConfig, params,
         memory = batch["image_embeds"]
     tokens = batch["tokens"]
     logits, _, aux = forward(cfg, params, tokens[:, :-1], memory=memory)
-    learner_lp = token_logprob_from_logits(logits, tokens[:, 1:])
+    learner_lp, learner_ent = _token_lp_ent(logits, tokens[:, 1:],
+                                            logprob_impl)
 
     sampler_lp = batch["sampler_lp"]
     if not rl.recompute_sampler_logps:
@@ -63,7 +82,7 @@ def rl_loss_fn(cfg: ModelConfig, rl: RLConfig, params,
         normalize=rl.adv_normalize,
         kind=rl.loss_type if rl.loss_type in ("bnpo", "dr_grpo") else "grpo")
     loss, metrics = policy_loss(rl, learner_lp, sampler_lp, batch["mask"],
-                                adv)
+                                adv, entropy=learner_ent)
     for k, v in aux.items():                      # MoE router diagnostics
         metrics[k] = v / max(cfg.num_blocks, 1)
     metrics["reward_mean"] = batch["rewards"].mean()
@@ -77,7 +96,8 @@ def train_step(cfg: ModelConfig, rl: RLConfig, tc: TrainConfig,
                ) -> Tuple[TrainState, Dict[str, jax.Array]]:
     """One (optionally micro-batched) RL update."""
     def loss_fn(params, mb):
-        return rl_loss_fn(cfg, rl, params, mb, memory=memory)
+        return rl_loss_fn(cfg, rl, params, mb, memory=memory,
+                          logprob_impl=tc.logprob_impl)
 
     if tc.grad_accum > 1:
         def mb_grads(carry, mb):
@@ -85,20 +105,26 @@ def train_step(cfg: ModelConfig, rl: RLConfig, tc: TrainConfig,
             (_, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
                 state.params, mb)
             g_acc = jax.tree_util.tree_map(jnp.add, g_acc, g)
-            m_acc = jax.tree_util.tree_map(jnp.add, m_acc, m)
+            m_acc = {k: (jnp.maximum(m_acc[k], v) if k in MAX_METRICS
+                         else m_acc[k] + v) for k, v in m.items()}
             return (g_acc, m_acc), None
 
         mbs = jax.tree_util.tree_map(
             lambda x: x.reshape((tc.grad_accum, -1) + x.shape[1:]), batch)
         g0 = jax.tree_util.tree_map(
             lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
-        (_, m0), _ = jax.value_and_grad(loss_fn, has_aux=True)(
-            state.params, jax.tree_util.tree_map(lambda x: x[0], mbs))
-        m0 = jax.tree_util.tree_map(jnp.zeros_like, m0)
-        (grads, metrics), _ = jax.lax.scan(mb_grads, (g0, m0), mbs)
+        # metrics pytree structure only — jax.eval_shape performs no
+        # FLOPs, so the step runs exactly grad_accum loss evaluations
+        m_avals = jax.eval_shape(
+            lambda p, mb: loss_fn(p, mb)[1], state.params,
+            jax.tree_util.tree_map(lambda x: x[0], mbs))
+        m0 = {k: (jnp.full(s.shape, -jnp.inf, s.dtype) if k in MAX_METRICS
+                  else jnp.zeros(s.shape, s.dtype))
+              for k, s in m_avals.items()}
+        (grads, msum), _ = jax.lax.scan(mb_grads, (g0, m0), mbs)
         grads = jax.tree_util.tree_map(lambda g: g / tc.grad_accum, grads)
-        metrics = jax.tree_util.tree_map(lambda m: m / tc.grad_accum,
-                                         metrics)
+        metrics = {k: (v if k in MAX_METRICS else v / tc.grad_accum)
+                   for k, v in msum.items()}
     else:
         (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
             state.params, batch)
@@ -132,9 +158,10 @@ def jit_train_step(cfg: ModelConfig, rl: RLConfig, tc: TrainConfig,
 
 
 def sft_loss_fn(cfg: ModelConfig, params, tokens: jax.Array,
-                mask: jax.Array) -> jax.Array:
+                mask: jax.Array, logprob_impl: str = "fused") -> jax.Array:
     logits, _, _ = forward(cfg, params, tokens[:, :-1])
-    nll = -token_logprob_from_logits(logits, tokens[:, 1:])
+    lp, _ = _token_lp_ent(logits, tokens[:, 1:], logprob_impl)
+    nll = -lp
     return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
 
 
@@ -142,7 +169,9 @@ def jit_sft_step(cfg: ModelConfig, tc: TrainConfig):
     @jax.jit
     def f(state: TrainState, tokens, mask):
         loss, grads = jax.value_and_grad(
-            lambda p: sft_loss_fn(cfg, p, tokens, mask))(state.params)
+            lambda p: sft_loss_fn(cfg, p, tokens, mask,
+                                  logprob_impl=tc.logprob_impl))(
+            state.params)
         grads, gnorm = clip_by_global_norm(grads, tc.grad_clip)
         lr = warmup_schedule(tc, state.step)
         new_params, new_opt = adamw_update(tc, grads, state.opt,

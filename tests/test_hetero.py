@@ -99,6 +99,30 @@ class TestRuntime:
                    for _, b in rt.learner.buffer) or True
 
 
+class TestSamplerTelemetry:
+    def test_warmup_excluded_from_tokens_per_s(self):
+        """First generate call pays jit compile; it must not pollute the
+        steady-state tokens_per_s (serve_throughput convention)."""
+        from repro.data import PromptPipeline
+        from repro.hetero.nodes import SamplerNode
+        task = ArithmeticTask(max_operand=9, ops="+", prompt_width=5,
+                              seed=0)
+        tok = Tokenizer()
+        params = init_params(TINY, jax.random.PRNGKey(0))
+        hcfg = HeteroConfig(num_samplers=1, seed=0)
+        s = SamplerNode(0, TINY, RL,
+                        PromptPipeline(task, tok, 4, RL.group_size),
+                        task, tok, params, PolicyStore(), hcfg, seed=0)
+        s.generate_batch(0.0)
+        assert s.warmup_seconds > 0.0 and s.warmup_tokens > 0
+        assert s.gen_seconds == 0.0 and s.tokens_generated == 0
+        assert s.tokens_per_s > 0.0          # warmup-rate fallback
+        s.generate_batch(1.0)
+        assert s.gen_seconds > 0.0 and s.tokens_generated > 0
+        # steady-state rate excludes the compile-laden first call
+        assert s.tokens_per_s == s.tokens_generated / s.gen_seconds
+
+
 class TestCheckpoint:
     def test_roundtrip(self, rng):
         params = init_params(TINY, rng)

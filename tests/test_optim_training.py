@@ -122,6 +122,61 @@ class TestTrainStep:
             np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                        rtol=1e-4, atol=1e-5)
 
+    def test_loss_evaluated_exactly_grad_accum_times(self, rng,
+                                                     monkeypatch):
+        """Regression: the metrics-structure probe must not run a
+        throwaway forward/backward — a step performs exactly
+        ``grad_accum`` loss evaluations (jax.eval_shape costs none)."""
+        import repro.training as training
+        counter = {"n": 0}
+        orig = training.rl_loss_fn
+
+        def counted(*args, **kwargs):
+            jax.debug.callback(
+                lambda: counter.__setitem__("n", counter["n"] + 1))
+            return orig(*args, **kwargs)
+
+        monkeypatch.setattr(training, "rl_loss_fn", counted)
+        params = init_params(TINY, rng)
+        rl = RLConfig(loss_type="gepo", group_size=4, beta_kl=0.0)
+        batch = self._batch(jax.random.PRNGKey(5), b=16)
+        for accum in (1, 2, 4):
+            counter["n"] = 0
+            tc = TrainConfig(learning_rate=1e-3, grad_accum=accum,
+                             total_steps=10)
+            state = init_state(TINY, tc, params)
+            train_step(TINY, rl, tc, state, batch)
+            jax.effects_barrier()
+            assert counter["n"] == accum, (accum, counter["n"])
+
+    def test_grad_accum_max_metrics_not_averaged(self, rng):
+        """iw_max must be the max over the whole step, not a
+        mean-of-per-microbatch-maxes. Crafted 2-microbatch batch: the
+        halves land in different microbatches with very different
+        importance weights, so the buggy mean is measurably below the
+        true max."""
+        params = init_params(TINY, rng)
+        rl = RLConfig(loss_type="gepo", group_size=4, beta_kl=0.0)
+        batch = self._batch(jax.random.PRNGKey(5))
+        # skew the first group's sampler logps so its per-seq maxima
+        # differ sharply from the second microbatch's
+        batch["sampler_lp"] = batch["sampler_lp"].at[:4].add(-2.0)
+        metrics = {}
+        for accum in (1, 2):
+            tc = TrainConfig(learning_rate=1e-3, grad_accum=accum,
+                             total_steps=10)
+            state = init_state(TINY, tc, params)
+            _, m = train_step(TINY, rl, tc, state, batch)
+            metrics[accum] = m
+        np.testing.assert_allclose(float(metrics[2]["iw_max"]),
+                                   float(metrics[1]["iw_max"]),
+                                   rtol=1e-5)
+        # mean-type metrics still average to the full-batch value
+        for key in ("loss", "kl", "iw_mean", "adv_mean"):
+            np.testing.assert_allclose(float(metrics[2][key]),
+                                       float(metrics[1][key]),
+                                       rtol=1e-4, atol=1e-6)
+
     def test_sft_loss_decreases(self, rng):
         tc = TrainConfig(learning_rate=5e-3, total_steps=60)
         state = init_state(TINY, tc, init_params(TINY, rng))
