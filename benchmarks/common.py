@@ -63,6 +63,9 @@ def run_method(loss_type: str, *, mode: str = "online",
     steps = steps or STEPS
     jax.clear_caches()                  # bound executable memory on 1 core
     state0, _ = warm_start(seed)
+    # the lru-cached warm start is reused across run_method calls; the
+    # learner's donated train step never touches it because LearnerNode
+    # takes a plan-placed copy of whatever state it is given
     state = TrainState(params=state0.params, opt=state0.opt,
                        step=jnp.zeros((), jnp.int32))
     beta = beta_kl if beta_kl is not None else (

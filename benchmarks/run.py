@@ -27,12 +27,15 @@ MODULES = [
     ("hyperparams", "benchmarks.hyperparams"),
     ("serve", "benchmarks.serve_throughput"),
     ("logprob", "benchmarks.logprob_bench"),
+    ("scaling", "benchmarks.scaling_bench"),
 ]
 
 # modules cheap enough for the CI smoke job ("serve" stays out: CI
 # exercises benchmarks.serve_throughput --smoke as its own step;
-# "logprob" rides here so the CI benchmark-smoke covers the hot path)
-SMOKE_MODULES = ("fig2", "theory", "logprob")
+# "logprob" rides here so the CI benchmark-smoke covers the hot path;
+# "scaling" proves the sharded train step runs at data-axis sizes >1 —
+# its workers are subprocesses, so the forced device count never leaks)
+SMOKE_MODULES = ("fig2", "theory", "logprob", "scaling")
 
 
 def main() -> None:

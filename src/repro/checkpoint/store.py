@@ -1,14 +1,28 @@
 """Checkpointing: pytree ⇄ npz bytes, plus the versioned policy store that
 plays the role of App. E's ``Model_Sync_Path`` (learner publishes, samplers
-pull the latest version after their simulated transmission delay)."""
+pull the latest version after their simulated transmission delay).
+
+Round-trips are sharding-aware at the call sites: the learner host-gathers
+(``ExecutionPlan.host_gather``) before ``save_pytree`` and samplers
+``device_put`` the loaded tree onto their own plan — bytes on the wire are
+always plain host numpy.
+"""
 from __future__ import annotations
 
 import io
+import json
 import threading
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+# npz sidecar key describing leaves whose dtype numpy cannot round-trip
+# natively (ml_dtypes: bfloat16, float8_*...). Those are stored as raw
+# bytes and re-viewed on load — without this, np.savez round-trips
+# bfloat16 as opaque void16 ("|V2") and the restore either crashes or
+# silently mangles the published sampler weights.
+_EXOTIC_META = "__exotic_dtypes__"
 
 
 def _flatten_with_paths(tree: Any) -> List[Tuple[str, np.ndarray]]:
@@ -23,22 +37,43 @@ def _flatten_with_paths(tree: Any) -> List[Tuple[str, np.ndarray]]:
 
 def save_pytree(tree: Any) -> bytes:
     buf = io.BytesIO()
-    arrays = dict(_flatten_with_paths(tree))
+    arrays = {}
+    exotic: Dict[str, Dict] = {}
+    for key, arr in _flatten_with_paths(tree):
+        if np.dtype(arr.dtype).isbuiltin != 1:      # ml_dtypes et al.
+            exotic[key] = {"dtype": arr.dtype.name,
+                           "shape": list(arr.shape)}
+            arrays[key] = np.frombuffer(arr.tobytes(), np.uint8)
+        else:
+            arrays[key] = arr
+    if exotic:
+        arrays[_EXOTIC_META] = np.frombuffer(
+            json.dumps(exotic).encode("utf-8"), np.uint8)
     np.savez(buf, **arrays)
     return buf.getvalue()
 
 
 def load_pytree(data: bytes, like: Any) -> Any:
-    """Restore into the structure of ``like`` (paths must match)."""
+    """Restore into the structure of ``like`` (paths must match), leaf
+    dtypes following ``like``. Exotic-dtype leaves (bfloat16, ...) are
+    re-viewed from their raw-byte encoding, never upcast."""
     buf = io.BytesIO(data)
     with np.load(buf) as z:
         arrays = {k: z[k] for k in z.files}
+    exotic = {}
+    if _EXOTIC_META in arrays:
+        exotic = json.loads(arrays.pop(_EXOTIC_META).tobytes().decode())
     flat, treedef = jax.tree_util.tree_flatten_with_path(like)
     leaves = []
     for path, leaf in flat:
         key = "/".join(str(p.key) if hasattr(p, "key") else str(p.idx)
                        if hasattr(p, "idx") else str(p) for p in path)
         arr = arrays[key]
+        if key in exotic:
+            meta = exotic[key]
+            arr = np.frombuffer(arr.tobytes(),
+                                jax.numpy.dtype(meta["dtype"])
+                                ).reshape(meta["shape"])
         leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
@@ -47,19 +82,25 @@ class PolicyStore:
     """Versioned checkpoint store (thread-safe for the threaded runtime).
 
     The learner ``publish``es (version, bytes); samplers ``fetch`` the
-    newest version. Old versions are pruned beyond ``keep``.
+    newest version. Old versions are pruned beyond ``keep``; fetching a
+    version that was pruned degrades to the oldest retained one (counted
+    in ``stale_fetches``) — a sampler behind a long WAN delay should get
+    the closest surviving policy, not an exception.
     """
 
     def __init__(self, keep: int = 8) -> None:
         self._lock = threading.Lock()
         self._store: Dict[int, bytes] = {}
+        self._published: set = set()     # every version ever published
         self._latest = -1
         self._keep = keep
         self.bytes_published = 0
+        self.stale_fetches = 0
 
     def publish(self, version: int, data: bytes) -> None:
         with self._lock:
             self._store[version] = data
+            self._published.add(version)
             self._latest = max(self._latest, version)
             self.bytes_published += len(data)
             stale = sorted(self._store)[:-self._keep]
@@ -72,5 +113,16 @@ class PolicyStore:
 
     def fetch(self, version: Optional[int] = None) -> Tuple[int, bytes]:
         with self._lock:
-            v = self._latest if version is None else version
-            return v, self._store[v]
+            if not self._store:
+                raise KeyError("PolicyStore is empty — nothing published")
+            if version is None:
+                return self._latest, self._store[self._latest]
+            if version in self._store:
+                return version, self._store[version]
+            if version in self._published:      # published once, pruned
+                self.stale_fetches += 1
+                oldest = min(self._store)
+                return oldest, self._store[oldest]
+            raise KeyError(
+                f"version {version} was never published (retained: "
+                f"{sorted(self._store)}, latest: {self._latest})")

@@ -228,6 +228,12 @@ class TrainConfig:
     grad_clip: float = 1.0
     grad_accum: int = 1
     seed: int = 0
+    # Learner device mesh as "DxM" (data×model; "PxDxM" adds the slow
+    # inter-pod axis). "1x1" = single device. Resolved by the unified
+    # execution layer (repro.parallel.plan_from_flag); on CPU a >1 mesh
+    # needs XLA_FLAGS=--xla_force_host_platform_device_count=N exported
+    # before the first jax import.
+    mesh: str = "1x1"
     # Learner-side log-prob implementation (the RL hot path):
     #   "fused"   — auto-dispatch repro.kernels.ops.fused_token_logprob
     #               (Pallas TPU kernel, chunked lax.map elsewhere); no
@@ -249,6 +255,10 @@ class HeteroConfig:
     sync_interval_steps: int = 1     # learner checkpoint publish period
     window_s: float = 1800.0         # rollout eligibility window
     seed: int = 0
+    # Sampler-node device mesh as "DxM" (serve-mode tensor parallelism);
+    # same conventions as TrainConfig.mesh. All sampler nodes share it —
+    # HeteroRL's point is that it can differ from the learner's mesh.
+    sampler_mesh: str = "1x1"
 
 
 def smoke_variant(cfg: ModelConfig, **overrides) -> ModelConfig:

@@ -26,6 +26,7 @@ from repro.data import PromptPipeline, score_rollouts
 from repro.data.tasks import ArithmeticTask, Tokenizer
 from repro.hetero.events import EventSim, Transport
 from repro.hetero.latency import sample_delay
+from repro.parallel import ExecutionPlan, plan_from_flag
 from repro.sampling import generate, token_logps
 from repro.training import TrainState, jit_train_step
 
@@ -53,11 +54,17 @@ class SamplerNode:
                  tok: Tokenizer, params: Any, store: PolicyStore,
                  hcfg: HeteroConfig, seed: int,
                  engine: Optional[str] = None,
-                 logprob_impl: str = "fused") -> None:
+                 logprob_impl: str = "fused",
+                 plan: Optional[ExecutionPlan] = None) -> None:
         self.sid = sid
         self.cfg, self.rl = cfg, rl
         self.pipeline, self.task, self.tok = pipeline, task, tok
-        self.params = params
+        # serve-mode execution plan of this node (defaults to the
+        # HeteroConfig.sampler_mesh knob). The node owns a *copy* of the
+        # params placed on its plan: the learner's sharded step donates
+        # its buffers, so a by-reference alias would die under it.
+        self.plan = plan or plan_from_flag(hcfg.sampler_mesh, "serve")
+        self.params = self.plan.device_put_params(cfg, params, copy=True)
         self.store = store
         self.hcfg = hcfg
         self.engine = engine or rl.engine
@@ -99,7 +106,8 @@ class SamplerNode:
         self.key, k = jax.random.split(self.key)
         t0 = time.perf_counter()
         roll = generate(self.cfg, self.rl, self.params, prompts, k,
-                        vocab_limit=self.tok.vocab_size, engine=self.engine)
+                        vocab_limit=self.tok.vocab_size, engine=self.engine,
+                        plan=self.plan)
         ntok = int(np.asarray(roll["comp_mask"]).sum())
         dt = time.perf_counter() - t0
         if self.batches_generated == 0:         # jit compile folded in
@@ -132,10 +140,12 @@ class SamplerNode:
                             sampler_id=self.sid)
 
     def sync(self) -> None:
-        """Load the latest published checkpoint (post-delay)."""
+        """Load the latest published checkpoint (post-delay) and place it
+        onto this node's execution plan."""
         v, data = self.store.fetch()
         if v > self.version:
-            self.params = load_pytree(data, self.params)
+            self.params = self.plan.device_put_params(
+                self.cfg, load_pytree(data, self.params))
             self.version = v
             self.syncs += 1
 
@@ -149,11 +159,18 @@ class LearnerNode:
 
     def __init__(self, cfg: ModelConfig, rl: RLConfig, tc: TrainConfig,
                  hcfg: HeteroConfig, state: TrainState,
-                 store: PolicyStore) -> None:
+                 store: PolicyStore,
+                 plan: Optional[ExecutionPlan] = None) -> None:
         self.cfg, self.rl, self.tc, self.hcfg = cfg, rl, tc, hcfg
-        self.state = state
+        # learner execution plan (defaults to the TrainConfig.mesh knob).
+        # The sharded step donates the TrainState, so the node takes a
+        # plan-placed *copy*: the caller's state (often a warm start
+        # shared across runs) stays alive.
+        self.plan = plan or plan_from_flag(tc.mesh, "train")
+        self.state = self.plan.device_put_state(cfg, state, "adamw",
+                                                copy=True)
         self.store = store
-        self.step_fn = jit_train_step(cfg, rl, tc)
+        self.step_fn = jit_train_step(cfg, rl, tc, plan=self.plan)
         self.buffer: List[Tuple[float, RolloutBatch]] = []
         self.step = 0
         self.discarded = 0
@@ -161,7 +178,8 @@ class LearnerNode:
         self._publish()
 
     def _publish(self) -> None:
-        self.store.publish(self.step, save_pytree(self.state.params))
+        self.store.publish(self.step, save_pytree(
+            self.plan.host_gather(self.state.params)))
 
     def receive(self, now_s: float, batch: RolloutBatch) -> None:
         self.buffer.append((now_s, batch))
@@ -180,10 +198,11 @@ class LearnerNode:
         return None
 
     def train_on(self, batch: RolloutBatch) -> Dict[str, float]:
-        jb = {"tokens": jnp.asarray(batch.tokens),
-              "mask": jnp.asarray(batch.mask),
-              "sampler_lp": jnp.asarray(batch.sampler_lp),
-              "rewards": jnp.asarray(batch.rewards)}
+        jb = self.plan.device_put_batch(self.cfg, {
+            "tokens": jnp.asarray(batch.tokens),
+            "mask": jnp.asarray(batch.mask),
+            "sampler_lp": jnp.asarray(batch.sampler_lp),
+            "rewards": jnp.asarray(batch.rewards)})
         self.state, metrics = self.step_fn(self.state, jb)
         self.step += 1
         out = {k: float(v) for k, v in metrics.items()}

@@ -25,6 +25,7 @@ from repro.core.diagnostics import MetricsHistory
 from repro.data import ArithmeticTask, PromptPipeline, Tokenizer, score_rollouts
 from repro.hetero.events import EventSim, Transport
 from repro.hetero.nodes import LearnerNode, RolloutBatch, SamplerNode
+from repro.parallel import ExecutionPlan
 from repro.sampling import generate
 from repro.training import TrainState
 
@@ -36,7 +37,9 @@ class HeteroRuntime:
                  learner_step_s: float = 28.125,
                  sampler_gen_s: Optional[float] = None,
                  eval_fn: Optional[Callable[[Any], float]] = None,
-                 eval_every: int = 10) -> None:
+                 eval_every: int = 10,
+                 learner_plan: Optional[ExecutionPlan] = None,
+                 sampler_plan: Optional[ExecutionPlan] = None) -> None:
         self.cfg, self.rl, self.tc, self.hcfg = cfg, rl, tc, hcfg
         self.task, self.tok = task, tok
         self.learner_step_s = learner_step_s
@@ -49,14 +52,15 @@ class HeteroRuntime:
         self.sim = EventSim()
         self.transport = Transport(self.sim)
         self.store = PolicyStore()
-        self.learner = LearnerNode(cfg, rl, tc, hcfg, state, self.store)
+        self.learner = LearnerNode(cfg, rl, tc, hcfg, state, self.store,
+                                   plan=learner_plan)
         self.samplers = [
             SamplerNode(i, cfg, rl,
                         PromptPipeline(task, tok, prompts_per_batch,
                                        rl.group_size),
-                        task, tok, state.params, self.store, hcfg,
-                        seed=hcfg.seed * 1000 + i,
-                        logprob_impl=tc.logprob_impl)
+                        task, tok, self.learner.state.params, self.store,
+                        hcfg, seed=hcfg.seed * 1000 + i,
+                        logprob_impl=tc.logprob_impl, plan=sampler_plan)
             for i in range(hcfg.num_samplers)
         ]
         self._learner_busy = False
@@ -118,21 +122,28 @@ def run_online(cfg: ModelConfig, rl: RLConfig, tc: TrainConfig,
                task: ArithmeticTask, tok: Tokenizer, state: TrainState, *,
                num_steps: int, prompts_per_batch: int = 8, seed: int = 0,
                eval_fn: Optional[Callable[[Any], float]] = None,
-               eval_every: int = 10):
+               eval_every: int = 10,
+               learner_plan: Optional[ExecutionPlan] = None,
+               sampler_plan: Optional[ExecutionPlan] = None):
     """Synchronous on-policy RL (Max Tolerable Delay 0, Table 1): the
-    sampler always holds the learner's current parameters."""
+    sampler always holds the learner's current parameters. Plans default
+    to the ``TrainConfig.mesh`` knob (learner) / 1×1 (sampler)."""
     hcfg = HeteroConfig(num_samplers=1, max_delay_steps=0,
                         delay_distribution="constant", delay_min_s=0.0,
                         delay_median_s=0.0, seed=seed)
     store = PolicyStore()
-    learner = LearnerNode(cfg, rl, tc, hcfg, state, store)
+    learner = LearnerNode(cfg, rl, tc, hcfg, state, store,
+                          plan=learner_plan)
     pipeline = PromptPipeline(task, tok, prompts_per_batch, rl.group_size)
     sampler = SamplerNode(0, cfg, rl, pipeline, task, tok,
                           learner.state.params, store, hcfg, seed=seed,
-                          logprob_impl=tc.logprob_impl)
+                          logprob_impl=tc.logprob_impl, plan=sampler_plan)
     eval_scores: List[float] = []
     for step in range(num_steps):
-        sampler.params = learner.state.params       # strict synchrony
+        # strict synchrony: re-placed from the learner every step (the
+        # learner's sharded step donates the previous buffers right after)
+        sampler.params = sampler.plan.device_put_params(
+            cfg, learner.state.params)
         sampler.version = learner.step
         batch = sampler.generate_batch(float(step))
         learner.receive(float(step), batch)

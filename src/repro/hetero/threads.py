@@ -24,6 +24,7 @@ from repro.core.diagnostics import MetricsHistory
 from repro.data import ArithmeticTask, PromptPipeline, Tokenizer
 from repro.hetero.latency import sample_delay
 from repro.hetero.nodes import LearnerNode, RolloutBatch, SamplerNode
+from repro.parallel import ExecutionPlan
 from repro.training import TrainState
 
 
@@ -32,19 +33,24 @@ class ThreadedHeteroRuntime:
                  hcfg: HeteroConfig, task: ArithmeticTask, tok: Tokenizer,
                  state: TrainState, *, prompts_per_batch: int = 4,
                  time_scale: float = 1e-4,
-                 queue_size: int = 16) -> None:
+                 queue_size: int = 16,
+                 learner_plan: Optional[ExecutionPlan] = None,
+                 sampler_plan: Optional[ExecutionPlan] = None) -> None:
         self.hcfg = hcfg
         self.time_scale = time_scale
         self.store = PolicyStore()
-        self.learner = LearnerNode(cfg, rl, tc, hcfg, state, self.store)
+        self.learner = LearnerNode(cfg, rl, tc, hcfg, state, self.store,
+                                   plan=learner_plan)
         self.queue: "queue.Queue[RolloutBatch]" = queue.Queue(queue_size)
+        # each sampler owns a plan-placed *copy* of the params (SamplerNode
+        # ctor) — the learner thread's donated step never touches them
         self.samplers = [
             SamplerNode(i, cfg, rl,
                         PromptPipeline(task, tok, prompts_per_batch,
                                        rl.group_size),
-                        task, tok, state.params, self.store, hcfg,
-                        seed=hcfg.seed * 1000 + i,
-                        logprob_impl=tc.logprob_impl)
+                        task, tok, self.learner.state.params, self.store,
+                        hcfg, seed=hcfg.seed * 1000 + i,
+                        logprob_impl=tc.logprob_impl, plan=sampler_plan)
             for i in range(hcfg.num_samplers)
         ]
         self._stop = threading.Event()

@@ -27,10 +27,10 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.config import (INPUT_SHAPES, RLConfig, SHAPES_BY_NAME,
                           ShapeConfig, TrainConfig)
 from repro.configs import ALL, ARCHS, get_config, supports_shape
-from repro.launch import sharding as shd
 from repro.launch import step_fns as sf
 from repro.launch.costmodel import bytes_estimate, flops_estimate
-from repro.launch.mesh import data_axes, make_production_mesh
+from repro.parallel import ExecutionPlan, data_axes, make_production_mesh
+from repro.parallel.axes import act_sharding_for
 from repro.launch.roofline import (entry_io_bytes, model_flops,
                                    normalize_cost_analysis,
                                    parse_collective_bytes,
@@ -72,7 +72,10 @@ def lower_combo(arch: str, shape_name: str, mesh, *,
     if optimized and mode == "train" and not cfg.num_experts:
         pmode = "train_fsdp"        # §Perf H-A3: pure ZeRO-3, no TP
         tc = TrainConfig(grad_accum=1)
-    act = shd.act_sharding_for(pmode, mesh)
+    # the same ExecutionPlan type the runtime executes with — the dry-run
+    # only *lowers* against its sharding trees instead of re-deriving them
+    plan = ExecutionPlan(mesh=mesh, mode=pmode)
+    act = act_sharding_for(pmode, mesh)
     cfg = dataclasses.replace(cfg, act_sharding=act)
     if optimized and shape.kind == "decode" and "local" in cfg.block_pattern:
         # §Perf H-G1: ring-buffer KV for sliding-window layers
@@ -89,17 +92,11 @@ def lower_combo(arch: str, shape_name: str, mesh, *,
     from repro.runtime_context import mesh_context
     with mesh_context(mesh):
         if mode == "train":
-            step = sf.make_train_fn(cfg, rl, tc)
+            step = sf.make_train_fn(cfg, rl, tc, plan=plan)
             state = sf.abstract_state(cfg)
             batch = sf.abstract_batch(cfg, shape)
-            pspecs = shd.param_specs(cfg, pmode, mesh)
-            state_specs = sf.TrainState(
-                params=pspecs,
-                opt=shd.opt_specs(pspecs, sf.optimizer_for(cfg)),
-                step=P())
-            bspecs = shd.batch_specs(cfg, mesh)
-            in_sh = (shd.to_named_fit(mesh, state_specs, state),
-                     shd.to_named_fit(mesh, bspecs, batch))
+            in_sh = (plan.state_shardings(cfg, sf.optimizer_for(cfg)),
+                     plan.batch_shardings(cfg, batch))
             out_sh = (in_sh[0], None)
             lowered = jax.jit(step, in_shardings=in_sh,
                               out_shardings=out_sh).lower(state, batch)
@@ -108,17 +105,13 @@ def lower_combo(arch: str, shape_name: str, mesh, *,
             params = sf.abstract_params(cfg)
             batch = {k: v for k, v in sf.abstract_batch(cfg, shape).items()
                      if k in ("tokens", "frames", "image_embeds")}
-            pspecs = shd.param_specs(cfg, pmode, mesh)
-            bspecs = {k: v for k, v in shd.batch_specs(cfg, mesh).items()
-                      if k in batch}
             cache = sf.abstract_cache(cfg, shape.global_batch,
                                       shape.seq_len)
-            cspecs = shd.cache_specs(cfg, cache, mode, mesh)
             dp = data_axes(mesh)
-            in_sh = (shd.to_named_fit(mesh, pspecs, params),
-                     shd.to_named_fit(mesh, bspecs, batch))
+            in_sh = (plan.param_shardings(cfg),
+                     plan.batch_shardings(cfg, batch))
             out_sh = (NamedSharding(mesh, P(dp)),
-                      shd.to_named_fit(mesh, cspecs, cache))
+                      plan.cache_shardings(cfg, cache))
             lowered = jax.jit(step, in_shardings=in_sh,
                               out_shardings=out_sh).lower(params, batch)
         else:                                        # decode
@@ -128,12 +121,10 @@ def lower_combo(arch: str, shape_name: str, mesh, *,
                                       shape.seq_len)
             token = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
             pos = jax.ShapeDtypeStruct((), jnp.int32)
-            pspecs = shd.param_specs(cfg, pmode, mesh)
-            cspecs = shd.cache_specs(cfg, cache, mode, mesh)
             dp = data_axes(mesh)
             tok_spec = P() if mode == "long" else P(dp)
-            csh = shd.to_named_fit(mesh, cspecs, cache)
-            in_sh = (shd.to_named_fit(mesh, pspecs, params), csh,
+            csh = plan.cache_shardings(cfg, cache)
+            in_sh = (plan.param_shardings(cfg), csh,
                      NamedSharding(mesh, tok_spec), NamedSharding(mesh, P()))
             out_sh = (NamedSharding(mesh, tok_spec), csh)
             lowered = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,

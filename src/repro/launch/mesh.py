@@ -1,40 +1,9 @@
-"""Production meshes for the TPU v5e target.
+"""Back-compat shim: meshes now live in ``repro.parallel.mesh`` (the
+unified execution layer owns placement for train, sample, and dry-run)."""
+from repro.parallel.mesh import (HBM_BW, ICI_BW, PEAK_BF16_FLOPS,  # noqa: F401
+                                 data_axes, local_mesh, make_debug_mesh,
+                                 make_production_mesh, mesh_from_flag)
 
-Single pod: 256 chips as (data=16, model=16).
-Multi-pod: 2 pods × 256 chips as (pod=2, data=16, model=16) — the ``pod``
-axis is the slow inter-pod (DCN/WAN) dimension; HeteroRL's design keeps
-cross-pod traffic to checkpoint broadcast + rollout streaming, but the
-dry-run also proves the *learner step itself* shards across pods.
-
-Defined as functions (never module-level constants) so importing this
-module does not touch jax device state.
-"""
-from __future__ import annotations
-
-from typing import Tuple
-
-import jax
-
-# TPU v5e hardware constants (per chip) used by the roofline analysis.
-PEAK_BF16_FLOPS = 197e12          # FLOP/s
-HBM_BW = 819e9                    # bytes/s
-ICI_BW = 50e9                     # bytes/s per link
-
-
-def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
-
-
-def make_debug_mesh(n_data: int = 2, n_model: int = 2, *,
-                    multi_pod: bool = False) -> jax.sharding.Mesh:
-    """Small mesh for CI-scale dry-run tests (requires
-    --xla_force_host_platform_device_count >= product)."""
-    if multi_pod:
-        return jax.make_mesh((2, n_data, n_model), ("pod", "data", "model"))
-    return jax.make_mesh((n_data, n_model), ("data", "model"))
-
-
-def data_axes(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:
-    return (("pod", "data") if "pod" in mesh.axis_names else ("data",))
+__all__ = ["make_production_mesh", "make_debug_mesh", "local_mesh",
+           "mesh_from_flag", "data_axes", "PEAK_BF16_FLOPS", "HBM_BW",
+           "ICI_BW"]

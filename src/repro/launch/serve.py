@@ -11,6 +11,11 @@ Two engines (``--engine``):
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b \
       --batch 16 --max-new 24 --engine continuous --slots 8
+
+Tensor-parallel serving runs through the same ExecutionPlan as training
+(on CPU export the host-device override first):
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+  PYTHONPATH=src python -m repro.launch.serve --mesh 1x4
 """
 from __future__ import annotations
 
@@ -25,6 +30,7 @@ from repro.config import RLConfig
 from repro.configs import smoke
 from repro.data import ArithmeticTask, Tokenizer, encode_prompts
 from repro.models import encode, init_params
+from repro.parallel import plan_from_flag
 from repro.sampling import generate
 
 
@@ -46,6 +52,9 @@ def main() -> None:
     ap.add_argument("--sync-every", type=int, default=8,
                     help="decode horizon: jitted decode steps per "
                          "scheduler sync (continuous engine)")
+    ap.add_argument("--mesh", default="1x1",
+                    help="serve mesh DxM (batch over data × tensor "
+                         "parallel over model)")
     ap.add_argument("--temperature", type=float, default=0.6)
     ap.add_argument("--top-k", type=int, default=20)
     ap.add_argument("--top-p", type=float, default=0.95)
@@ -59,8 +68,10 @@ def main() -> None:
     tok = Tokenizer()
     task = ArithmeticTask(max_operand=99, ops="+-", prompt_width=8,
                           seed=args.seed)
+    plan = plan_from_flag(args.mesh, "serve")
+    print(f"[serve] {plan.describe()}")
     key = jax.random.PRNGKey(args.seed)
-    params = init_params(cfg, key)
+    params = plan.device_put_params(cfg, init_params(cfg, key))
 
     memory = None
     if cfg.is_encdec:
@@ -88,7 +99,7 @@ def main() -> None:
         t1 = time.time()
         roll = generate(cfg, rl, params, prompts, k, max_new=args.max_new,
                         vocab_limit=tok.vocab_size, memory=memory,
-                        **gen_kwargs)
+                        plan=plan, **gen_kwargs)
         dt = time.time() - t1
         n_tok = int(np.asarray(roll["comp_mask"]).sum())
         total_tok += n_tok

@@ -46,18 +46,24 @@ def grad_accum_for(cfg: ModelConfig) -> int:
 # step functions
 
 
-def make_train_fn(cfg: ModelConfig, rl: RLConfig, tc: TrainConfig):
+def make_train_fn(cfg: ModelConfig, rl: RLConfig, tc: TrainConfig,
+                  plan=None):
     """RL train step for the launcher/dry-run grid. The learner-side
     token-logprob backend follows ``tc.logprob_impl`` (default "fused":
     the streaming ``repro.kernels.ops.fused_token_logprob`` dispatch —
     Pallas on TPU, chunked ``lax.map`` on the CPU dry-run — so the
-    lowered step never materializes a (B·T, V) f32 log-softmax)."""
+    lowered step never materializes a (B·T, V) f32 log-softmax). With an
+    ``ExecutionPlan``, grad-accum microbatch slicing is pinned
+    shard-local (``constrain_microbatches``)."""
     opt = optimizer_for(cfg)
+    mb_con = (plan.microbatch_constraint(cfg, tc.grad_accum)
+              if plan is not None else None)
 
     def step(state: TrainState, batch: Dict[str, jax.Array]):
         # frames / image_embeds ride in the batch so grad-accum
         # micro-batching slices them together with the tokens.
-        return train_step(cfg, rl, tc, state, batch, optimizer=opt)
+        return train_step(cfg, rl, tc, state, batch, optimizer=opt,
+                          mb_constraint=mb_con)
     return step
 
 

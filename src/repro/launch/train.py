@@ -9,6 +9,11 @@ any of the paper's loss types, online or heterogeneous.
 Usage:
   PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b \
       --loss gepo --steps 200 --mode hetero --max-delay 64
+
+Multi-device (one unified ExecutionPlan drives SFT, RL learner and
+samplers; on CPU export the host-device override first):
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src python -m repro.launch.train --mesh 4x2 --sampler-mesh 1x2
 """
 from __future__ import annotations
 
@@ -27,6 +32,7 @@ from repro.data import ArithmeticTask, Tokenizer
 from repro.data.tasks import EOS
 from repro.hetero import HeteroRuntime, run_online
 from repro.models import init_params
+from repro.parallel import plan_from_flag
 from repro.training import init_state, jit_sft_step
 
 
@@ -90,6 +96,13 @@ def main() -> None:
                     choices=["fused", "pallas", "chunked", "naive"],
                     help="learner token-logprob backend (see "
                          "TrainConfig.logprob_impl)")
+    ap.add_argument("--mesh", default="1x1",
+                    help="learner mesh DxM (data×model), e.g. 2x2; needs "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count"
+                         " on CPU")
+    ap.add_argument("--sampler-mesh", default="1x1",
+                    help="sampler-node mesh DxM (serve-mode tensor "
+                         "parallel)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--eval-every", type=int, default=10)
     ap.add_argument("--out", default=None)
@@ -105,11 +118,18 @@ def main() -> None:
     task = ArithmeticTask(max_operand=20, ops="+", prompt_width=6,
                           seed=args.seed)
 
+    # one ExecutionPlan per role; the same plan drives SFT warm start,
+    # the RL learner step and (via HeteroConfig) every sampler node
+    learner_plan = plan_from_flag(args.mesh, "train")
+    sampler_plan = plan_from_flag(args.sampler_mesh, "serve")
+    print(f"[train] learner {learner_plan.describe()} | "
+          f"samplers {sampler_plan.describe()}")
+
     key = jax.random.PRNGKey(args.seed)
     params = init_params(cfg, key)
     tc_sft = TrainConfig(learning_rate=1e-2, total_steps=args.sft_steps,
-                         logprob_impl=args.logprob_impl)
-    state = init_state(cfg, tc_sft, params)
+                         logprob_impl=args.logprob_impl, mesh=args.mesh)
+    state = init_state(cfg, tc_sft, params, plan=learner_plan)
     t0 = time.time()
     state, sft_loss = sft_warmstart(cfg, tc_sft, task, tok, state,
                                     steps=args.sft_steps, seed=args.seed)
@@ -117,7 +137,7 @@ def main() -> None:
           f"({time.time()-t0:.0f}s)")
 
     tc = TrainConfig(learning_rate=args.lr, total_steps=args.steps,
-                     logprob_impl=args.logprob_impl)
+                     logprob_impl=args.logprob_impl, mesh=args.mesh)
     state = state._replace(step=jnp.zeros((), jnp.int32))
     eval_fn = make_eval_fn(cfg, rl, task, tok)
 
@@ -125,12 +145,14 @@ def main() -> None:
         hist, evals, learner = run_online(
             cfg, rl, tc, task, tok, state, num_steps=args.steps,
             prompts_per_batch=args.prompts, seed=args.seed,
-            eval_fn=eval_fn, eval_every=args.eval_every)
+            eval_fn=eval_fn, eval_every=args.eval_every,
+            learner_plan=learner_plan, sampler_plan=sampler_plan)
     else:
         hcfg = HeteroConfig(num_samplers=args.num_samplers,
                             max_delay_steps=args.max_delay,
                             delay_distribution=args.delay_dist,
-                            delay_median_s=300.0, seed=args.seed)
+                            delay_median_s=300.0, seed=args.seed,
+                            sampler_mesh=args.sampler_mesh)
         rt = HeteroRuntime(cfg, rl, tc, hcfg, task, tok, state,
                            prompts_per_batch=args.prompts,
                            eval_fn=eval_fn, eval_every=args.eval_every)

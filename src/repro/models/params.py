@@ -6,8 +6,9 @@ shape, initializer and *logical axes*. From the template tree we derive:
 - ``init_params``      — materialized arrays (smoke tests / real training)
 - ``abstract_params``  — ``jax.ShapeDtypeStruct`` stand-ins (multi-pod
                           dry-run: no allocation ever happens)
-- sharding specs       — ``repro.launch.sharding`` maps logical axes to
-                          mesh axes per execution mode
+- sharding specs       — ``repro.parallel.axes`` maps logical axes to
+                          mesh axes per execution mode (consumed through
+                          ``repro.parallel.ExecutionPlan``)
 
 Logical axis vocabulary:
   vocab, embed (d_model), ffn (d_ff), qkv (flattened heads*head_dim),

@@ -31,6 +31,7 @@ import numpy as np
 from repro.config import ModelConfig, RLConfig
 from repro.data.tasks import EOS, PAD
 from repro.models import decode_step, forward, init_cache
+from repro.parallel import plan_for_params
 from repro.sampling.paged_cache import (PageAllocator, SCRATCH_PAGE,
                                         init_paged_pool,
                                         paged_cache_supported, pages_for)
@@ -58,12 +59,16 @@ def _model_logp(last: jax.Array, tok: jax.Array) -> jax.Array:
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "rl", "max_new",
-                                             "vocab_limit"))
+                                             "vocab_limit", "plan"))
 def _generate_jit(cfg: ModelConfig, rl: RLConfig, params, prompts, key,
                   max_new: int, vocab_limit: int,
-                  memory: Optional[jax.Array] = None):
+                  memory: Optional[jax.Array] = None, plan=None):
     b, tp = prompts.shape
+    if plan is not None:        # tensor-parallel serve: the ExecutionPlan
+        params = plan.constrain_params(cfg, params)
     cache = init_cache(cfg, params, b, tp + max_new, memory=memory)
+    if plan is not None:        # KV cache placed by the same cache_specs
+        cache = plan.constrain_cache(cfg, cache)
     logits, cache, _ = forward(cfg, params, prompts, cache=cache,
                                memory=memory)
     last = logits[:, -1]
@@ -98,12 +103,16 @@ def _generate_jit(cfg: ModelConfig, rl: RLConfig, params, prompts, key,
 # continuous-batching engine: slot pool + paged KV cache
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(2,))
+@functools.partial(jax.jit, static_argnames=("cfg", "plan"),
+                   donate_argnums=(2,))
 def _prefill_chunk_jit(cfg: ModelConfig, params, pool, page_row, tokens,
-                       start):
+                       start, plan=None):
     """One chunk of one request's prompt: tokens (1, C) at positions
     ``start + [0, C)``, K/V scattered into the request's pages. Returns
     (logits (C, V), pool)."""
+    if plan is not None:
+        params = plan.constrain_params(cfg, params)
+        pool = plan.constrain_cache(cfg, pool)
     c = tokens.shape[1]
     positions = start + jnp.arange(c, dtype=jnp.int32)[None, :]
     logits, pool, _ = forward(cfg, params, tokens, positions=positions,
@@ -112,11 +121,12 @@ def _prefill_chunk_jit(cfg: ModelConfig, params, pool, page_row, tokens,
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "rl", "vocab_limit",
-                                             "sync_every"),
+                                             "sync_every", "plan"),
                    donate_argnums=(3,))
 def _decode_chunk_jit(cfg: ModelConfig, rl: RLConfig, params, pool,
                       page_table, last, pos, active, req_keys, gen0,
-                      max_new_v, vocab_limit: int, sync_every: int):
+                      max_new_v, vocab_limit: int, sync_every: int,
+                      plan=None):
     """``sync_every`` decode steps over every slot in one executable — the
     decode horizon that amortizes host dispatch; the scheduler regains
     control (EOS recycling, admission) only between chunks.
@@ -128,6 +138,10 @@ def _decode_chunk_jit(cfg: ModelConfig, rl: RLConfig, params, pool,
     the host discards post-EOS draws, and earlier draws are bit-identical
     to the static engine's.
     """
+    if plan is not None:
+        params = plan.constrain_params(cfg, params)
+        pool = plan.constrain_cache(cfg, pool)
+
     def step(carry, i):
         pool, last, done = carry
         over = (gen0 + i) >= max_new_v              # token budget exhausted
@@ -158,6 +172,7 @@ def generate_continuous(cfg: ModelConfig, rl: RLConfig, params,
                         prefill_chunk: Optional[int] = None,
                         prompt_lens: Optional[Sequence[int]] = None,
                         sync_every: int = 8,
+                        plan=None,
                         ) -> Dict[str, jax.Array]:
     """Continuous-batching generation over ``prompts`` (B, Tp).
 
@@ -168,7 +183,9 @@ def generate_continuous(cfg: ModelConfig, rl: RLConfig, params,
     ``prefill_chunk`` bounds how much prompt is prefilled between decode
     chunks (defaults to the whole prompt in one chunk), and ``sync_every``
     is the decode horizon: jitted decode steps per scheduler sync (larger
-    amortizes dispatch, smaller recycles slots sooner).
+    amortizes dispatch, smaller recycles slots sooner). ``plan`` (an
+    ``ExecutionPlan``) makes prefill/decode run tensor-parallel: params
+    and the paged KV pool are constrained by the plan's cache_specs.
     """
     if not paged_cache_supported(cfg):
         raise ValueError(f"{cfg.name}: continuous engine needs an "
@@ -218,7 +235,7 @@ def generate_continuous(cfg: ModelConfig, rl: RLConfig, params,
                 sched.block_table[pref.slot:pref.slot + 1])
             logits_c, pool = _prefill_chunk_jit(
                 cfg, params, pool, page_row, jnp.asarray(chunk[None]),
-                jnp.int32(c0))
+                jnp.int32(c0), plan=plan)
             sched.stats["prefill_chunks"] += 1
             pref.prefill_pos = min(pref.prompt_len, c0 + prefill_chunk)
             if pref.prefill_pos >= pref.prompt_len:     # prompt fully cached
@@ -242,7 +259,7 @@ def generate_continuous(cfg: ModelConfig, rl: RLConfig, params,
             cfg, rl, params, pool, jnp.asarray(bt), last,
             jnp.asarray(pos_np), jnp.asarray(active_np),
             jnp.asarray(req_keys_np), jnp.asarray(gen_np),
-            jnp.asarray(max_new_np), vocab_limit, sync_every)
+            jnp.asarray(max_new_np), vocab_limit, sync_every, plan=plan)
         sched.stats["decode_steps"] += sync_every
         tok_np, lp_np = np.asarray(toks), np.asarray(lps)
         for r in dec:
@@ -291,6 +308,7 @@ def generate(cfg: ModelConfig, rl: RLConfig, params, prompts: jax.Array,
              vocab_limit: Optional[int] = None,
              memory: Optional[jax.Array] = None,
              engine: Optional[str] = None,
+             plan=None,
              **continuous_kwargs) -> Dict[str, jax.Array]:
     """Returns a rollout dict:
     tokens (B, Tp+max_new) | completions (B, max_new) |
@@ -299,9 +317,12 @@ def generate(cfg: ModelConfig, rl: RLConfig, params, prompts: jax.Array,
     ``engine`` (default ``rl.engine``) picks the static scan or the
     continuous-batching slot pool; architectures the paged cache can't
     serve (SSM/enc-dec/ring-KV/modality memory) fall back to static with
-    a warning.
+    a warning. Every path executes under an ``ExecutionPlan`` (``plan``;
+    default: a serve-mode plan on whatever mesh ``params`` already live
+    on) — on a >1-device mesh the same call runs tensor-parallel.
     """
     engine = engine or rl.engine
+    plan = plan or plan_for_params(params, "serve")
     if engine not in ("static", "continuous"):
         raise ValueError(f"unknown engine {engine!r}")
     if engine == "static" and continuous_kwargs:
@@ -315,6 +336,7 @@ def generate(cfg: ModelConfig, rl: RLConfig, params, prompts: jax.Array,
             return generate_continuous(cfg, rl, params, prompts, key,
                                        max_new=max_new,
                                        vocab_limit=vocab_limit,
+                                       plan=plan,
                                        **continuous_kwargs)
         dropped = (f"; ignoring {sorted(continuous_kwargs)}"
                    if continuous_kwargs else "")
@@ -322,7 +344,8 @@ def generate(cfg: ModelConfig, rl: RLConfig, params, prompts: jax.Array,
                       f"architecture/memory setup; falling back to "
                       f"static{dropped}", stacklevel=2)
     completions, sampler_lp, comp_mask = _generate_jit(
-        cfg, rl, params, prompts, key, max_new, vocab_limit, memory)
+        cfg, rl, params, prompts, key, max_new, vocab_limit, memory,
+        plan=plan)
     tokens = jnp.concatenate([prompts, completions], axis=1)
     return {"tokens": tokens, "completions": completions,
             "sampler_lp": sampler_lp, "comp_mask": comp_mask,

@@ -50,10 +50,16 @@ class TrainState(NamedTuple):
 
 
 def init_state(cfg: ModelConfig, tc: TrainConfig, params,
-               optimizer: str = "adamw") -> TrainState:
+               optimizer: str = "adamw", plan=None) -> TrainState:
+    """Fresh optimizer state; with an ``ExecutionPlan`` the whole
+    ``TrainState`` is ``device_put`` onto the plan's shardings so the
+    first sharded step pays no resharding copy."""
     init = adamw_init if optimizer == "adamw" else adafactor_init
-    return TrainState(params=params, opt=init(params),
-                      step=jnp.zeros((), jnp.int32))
+    state = TrainState(params=params, opt=init(params),
+                       step=jnp.zeros((), jnp.int32))
+    if plan is not None:
+        state = plan.device_put_state(cfg, state, optimizer)
+    return state
 
 
 def rl_loss_fn(cfg: ModelConfig, rl: RLConfig, params,
@@ -92,9 +98,12 @@ def rl_loss_fn(cfg: ModelConfig, rl: RLConfig, params,
 def train_step(cfg: ModelConfig, rl: RLConfig, tc: TrainConfig,
                state: TrainState, batch: Dict[str, jax.Array], *,
                optimizer: str = "adamw",
-               memory: Optional[jax.Array] = None
+               memory: Optional[jax.Array] = None,
+               mb_constraint: Optional[Any] = None
                ) -> Tuple[TrainState, Dict[str, jax.Array]]:
-    """One (optionally micro-batched) RL update."""
+    """One (optionally micro-batched) RL update. ``mb_constraint`` (set by
+    the sharded step builder) re-pins the reshaped (accum, mb, ...) batch
+    so microbatch slicing stays shard-local under GSPMD."""
     def loss_fn(params, mb):
         return rl_loss_fn(cfg, rl, params, mb, memory=memory,
                           logprob_impl=tc.logprob_impl)
@@ -111,6 +120,8 @@ def train_step(cfg: ModelConfig, rl: RLConfig, tc: TrainConfig,
 
         mbs = jax.tree_util.tree_map(
             lambda x: x.reshape((tc.grad_accum, -1) + x.shape[1:]), batch)
+        if mb_constraint is not None:
+            mbs = mb_constraint(mbs)
         g0 = jax.tree_util.tree_map(
             lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
         # metrics pytree structure only — jax.eval_shape performs no
@@ -143,11 +154,16 @@ def train_step(cfg: ModelConfig, rl: RLConfig, tc: TrainConfig,
 
 
 def jit_train_step(cfg: ModelConfig, rl: RLConfig, tc: TrainConfig,
-                   optimizer: str = "adamw"):
-    @jax.jit
-    def f(state, batch):
-        return train_step(cfg, rl, tc, state, batch, optimizer=optimizer)
-    return f
+                   optimizer: str = "adamw", plan=None):
+    """Jitted train step through the unified execution layer: explicit
+    in/out shardings from the ``ExecutionPlan`` (default: the 1×1 local
+    plan) and a **donated** ``TrainState`` — callers must treat the input
+    state as consumed (keep copies of params you hand to other nodes).
+    With ``plan=None`` the ``TrainConfig.mesh`` knob decides (default the
+    1×1 local plan)."""
+    from repro.parallel import make_sharded_train_step, plan_from_flag
+    plan = plan or plan_from_flag(tc.mesh, "train")
+    return make_sharded_train_step(cfg, rl, tc, plan, optimizer=optimizer)
 
 
 # --------------------------------------------------------------------------
@@ -165,16 +181,10 @@ def sft_loss_fn(cfg: ModelConfig, params, tokens: jax.Array,
     return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
 
 
-def jit_sft_step(cfg: ModelConfig, tc: TrainConfig):
-    @jax.jit
-    def f(state: TrainState, tokens, mask):
-        loss, grads = jax.value_and_grad(
-            lambda p: sft_loss_fn(cfg, p, tokens, mask,
-                                  logprob_impl=tc.logprob_impl))(
-            state.params)
-        grads, gnorm = clip_by_global_norm(grads, tc.grad_clip)
-        lr = warmup_schedule(tc, state.step)
-        new_params, new_opt = adamw_update(tc, grads, state.opt,
-                                           state.params, lr)
-        return TrainState(new_params, new_opt, state.step + 1), loss
-    return f
+def jit_sft_step(cfg: ModelConfig, tc: TrainConfig, plan=None):
+    """Jitted SFT step through the same execution layer as the RL step
+    (plan shardings + donated state; ``TrainConfig.mesh`` decides when no
+    plan is passed)."""
+    from repro.parallel import make_sharded_sft_step, plan_from_flag
+    return make_sharded_sft_step(cfg, tc, plan or plan_from_flag(tc.mesh,
+                                                                 "train"))

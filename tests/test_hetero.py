@@ -140,8 +140,12 @@ class TestCheckpoint:
         assert store.latest_version() == 4
         v, data = store.fetch()
         assert v == 4 and data == bytes([4])
-        with pytest.raises(KeyError):
-            store.fetch(0)                        # pruned
+        # pruned version degrades to the oldest retained (counted), a
+        # never-published version is a descriptive error
+        v, data = store.fetch(0)
+        assert v == 3 and data == bytes([3]) and store.stale_fetches == 1
+        with pytest.raises(KeyError, match="never published"):
+            store.fetch(10)
 
 
 class TestThreadedRuntime:

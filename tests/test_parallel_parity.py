@@ -1,0 +1,96 @@
+"""Sharded-vs-single-device parity: ``make_sharded_train_step`` on a
+``make_debug_mesh(2, 2)`` (8 forced host devices, 4 used) must reproduce
+the unsharded ``train_step`` — params and metrics within tolerance, with
+the input ``TrainState`` donated — for both optimizers and grad-accum
+settings. Subprocess so the XLA_FLAGS device-count override never leaks
+into other tests."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.config import ModelConfig, RLConfig, TrainConfig, ATTN, MLP
+    from repro.models import init_params
+    from repro.parallel import ExecutionPlan, make_debug_mesh, \\
+        make_sharded_train_step
+    from repro.training import init_state, train_step
+
+    TINY = ModelConfig(name="tiny", family="dense", num_layers=2,
+                       d_model=48, num_heads=4, num_kv_heads=2, d_ff=96,
+                       vocab_size=32, block_pattern=(ATTN,),
+                       ffn_pattern=(MLP,), dtype="float32",
+                       attn_impl="naive", remat=False, rope_theta=1e4)
+    rl = RLConfig(loss_type="gepo", group_size=4, beta_kl=0.005)
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    batch = {
+        "tokens": jax.random.randint(ks[0], (8, 10), 0, 32),
+        "mask": jnp.ones((8, 9)),
+        "sampler_lp": -jnp.abs(jax.random.normal(ks[1], (8, 9))),
+        "rewards": (jax.random.uniform(ks[2], (8,)) > 0.5).astype(
+            jnp.float32),
+    }
+    params = init_params(TINY, ks[3])
+    plan = ExecutionPlan(mesh=make_debug_mesh(2, 2), mode="train")
+    assert plan.num_devices == 4
+
+    results = {}
+    for optimizer in ("adamw", "adafactor"):
+        for accum in (1, 2):
+            tc = TrainConfig(learning_rate=1e-3, grad_accum=accum,
+                             total_steps=10)
+            # single-device reference (no plan, no jit-boundary sharding)
+            ref_state = init_state(TINY, tc, params, optimizer=optimizer)
+            ref_new, ref_m = train_step(TINY, rl, tc, ref_state, batch,
+                                        optimizer=optimizer)
+            # sharded run on the 2x2 mesh, donated TrainState
+            st = init_state(TINY, tc, params, optimizer=optimizer,
+                            plan=plan)
+            step = make_sharded_train_step(TINY, rl, tc, plan,
+                                           optimizer=optimizer)
+            new_state, m = step(st, plan.device_put_batch(TINY, batch))
+            # donation: the input buffers must be consumed, not copied
+            donated = all(l.is_deleted() for l in
+                          jax.tree_util.tree_leaves(st.params))
+            # params parity
+            max_err = 0.0
+            for a, b in zip(jax.tree_util.tree_leaves(ref_new.params),
+                            jax.tree_util.tree_leaves(new_state.params)):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           rtol=5e-4, atol=1e-5)
+                max_err = max(max_err, float(np.max(np.abs(
+                    np.asarray(a) - np.asarray(b)))))
+            # metrics parity
+            for k in ref_m:
+                np.testing.assert_allclose(
+                    float(ref_m[k]), float(m[k]), rtol=2e-3, atol=1e-5,
+                    err_msg=f"{optimizer}/accum{accum}/{k}")
+            # out shardings honour the plan (params sharded, not bounced
+            # back to a single device)
+            lead = jax.tree_util.tree_leaves(new_state.params)[0]
+            assert lead.sharding.mesh == plan.mesh
+            results[f"{optimizer}_accum{accum}"] = {
+                "donated": donated, "max_param_err": max_err}
+            assert donated, (optimizer, accum)
+    print(json.dumps({"ok": True, "results": results}))
+""")
+
+
+def test_sharded_step_matches_single_device():
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         timeout=420)
+    assert out.returncode == 0, out.stderr[-4000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rec["ok"]
+    assert set(rec["results"]) == {"adamw_accum1", "adamw_accum2",
+                                   "adafactor_accum1", "adafactor_accum2"}
