@@ -58,7 +58,8 @@ def run_method(loss_type: str, *, mode: str = "online",
                top_k: int = 0, top_p: float = 1.0, adv_normalize: bool = True,
                gepo_smooth: float = 0.0, steps: Optional[int] = None,
                seed: int = 0, num_samplers: int = 2,
-               prompts_per_batch: int = 8, lr: float = 1e-3) -> Dict:
+               prompts_per_batch: int = 8, lr: float = 1e-3,
+               bandwidth_mbps: float = float("inf")) -> Dict:
     """One training run; returns the paper's summary stats + history."""
     steps = steps or STEPS
     jax.clear_caches()                  # bound executable memory on 1 core
@@ -88,7 +89,8 @@ def run_method(loss_type: str, *, mode: str = "online",
         hcfg = HeteroConfig(num_samplers=num_samplers,
                             max_delay_steps=max_delay,
                             delay_distribution=delay_dist,
-                            delay_median_s=delay_median_s, seed=seed)
+                            delay_median_s=delay_median_s, seed=seed,
+                            bandwidth_mbps=bandwidth_mbps)
         rt = HeteroRuntime(TINY, rl, tc, hcfg, task, tok, state,
                            prompts_per_batch=prompts_per_batch,
                            eval_fn=eval_fn, eval_every=eval_every)
@@ -97,7 +99,16 @@ def run_method(loss_type: str, *, mode: str = "online",
         learner = rt.learner
 
     best, last, gap = best_last_gap(evals)
+    sync_telemetry = rt.sync_telemetry() if mode != "online" else []
+    sampler_rows = [t for t in sync_telemetry if t["sampler"] >= 0]
     return {
+        "sync_bytes_on_wire": sum(t["bytes_on_wire"] for t in sampler_rows),
+        "sync_seconds": sum(t["sync_seconds"] for t in sampler_rows),
+        "sync_dedup_ratio": (float(np.mean([t["dedup_ratio"]
+                                            for t in sampler_rows]))
+                             if sampler_rows else 0.0),
+        "learner_bytes_streamed": (learner.bytes_streamed
+                                   if mode != "online" else 0),
         "loss_type": loss_type, "mode": mode,
         "eval_best": best, "eval_last": last, "gap": gap,
         "reward_last10": float(np.mean(hist.get("reward_mean")[-10:])),

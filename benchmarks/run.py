@@ -28,14 +28,17 @@ MODULES = [
     ("serve", "benchmarks.serve_throughput"),
     ("logprob", "benchmarks.logprob_bench"),
     ("scaling", "benchmarks.scaling_bench"),
+    ("sync", "benchmarks.sync_bench"),
 ]
 
 # modules cheap enough for the CI smoke job ("serve" stays out: CI
 # exercises benchmarks.serve_throughput --smoke as its own step;
 # "logprob" rides here so the CI benchmark-smoke covers the hot path;
 # "scaling" proves the sharded train step runs at data-axis sizes >1 —
-# its workers are subprocesses, so the forced device count never leaks)
-SMOKE_MODULES = ("fig2", "theory", "logprob", "scaling")
+# its workers are subprocesses, so the forced device count never leaks;
+# "sync" asserts the chunked weight transport beats whole-blob sync and
+# stays byte-identical — its mesh part subprocesses when devices < 4)
+SMOKE_MODULES = ("fig2", "theory", "logprob", "scaling", "sync")
 
 
 def main() -> None:

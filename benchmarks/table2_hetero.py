@@ -47,4 +47,18 @@ def run() -> list:
     rows.append(f"fig4,grad_norm_std_gepo_vs_gspo,"
                 f"{gepo['grad_norm_std']:.4g},{gspo['grad_norm_std']:.4g},"
                 f"-,-,-,-,-")
+    # payload-aware link (repro.transport): the same GEPO setting over a
+    # finite 200 Mbps WAN — D_M now includes serialization time of the
+    # bytes the chunked sync actually moved; the telemetry row records
+    # wire bytes, dedup ratio and simulated sync seconds per run.
+    bw = run_method("gepo", mode="hetero", max_delay=64,
+                    delay_median_s=900.0, bandwidth_mbps=200.0)
+    rows.append(f"table2_hetero,gepo@200Mbps,"
+                + ",".join(f"{bw[k]:.4f}" for k in KEYS))
+    rows.append(f"table2_link,gepo@200Mbps,"
+                f"wire_bytes={bw['sync_bytes_on_wire']:.0f},"
+                f"dedup={bw['sync_dedup_ratio']:.3f},"
+                f"sync_s={bw['sync_seconds']:.1f},"
+                f"learner_streamed={bw['learner_bytes_streamed']:.0f},"
+                f"staleness={bw['staleness_mean']:.2f},-,-,-")
     return rows

@@ -2,10 +2,13 @@
 plays the role of App. E's ``Model_Sync_Path`` (learner publishes, samplers
 pull the latest version after their simulated transmission delay).
 
-Round-trips are sharding-aware at the call sites: the learner host-gathers
-(``ExecutionPlan.host_gather``) before ``save_pytree`` and samplers
-``device_put`` the loaded tree onto their own plan — bytes on the wire are
-always plain host numpy.
+Round-trips are sharding-aware at the call sites: whole-blob callers
+host-gather (``ExecutionPlan.host_gather``) before ``save_pytree`` and
+``device_put`` the loaded tree onto their own plan. The chunked transport
+(``repro.transport``) instead streams per-shard views and uses this module
+only for the shared raw-byte codec (``encode_array``/``decode_array``) and
+the versioned store, which doubles as its chunk index
+(``put_chunk``/``publish_manifest``).
 """
 from __future__ import annotations
 
@@ -25,25 +28,41 @@ import numpy as np
 _EXOTIC_META = "__exotic_dtypes__"
 
 
-def _flatten_with_paths(tree: Any) -> List[Tuple[str, np.ndarray]]:
+def path_key(path: Tuple) -> str:
+    """Stable string key for a tree_flatten_with_path entry — the one
+    leaf-naming scheme shared by the npz blob format and the chunked
+    transport manifests (keys must agree for a sampler to restore)."""
+    return "/".join(str(p.key) if hasattr(p, "key") else str(p.idx)
+                    if hasattr(p, "idx") else str(p) for p in path)
+
+
+def flatten_with_paths(tree: Any) -> List[Tuple[str, Any]]:
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
-    out = []
-    for path, leaf in flat:
-        key = "/".join(str(p.key) if hasattr(p, "key") else str(p.idx)
-                       if hasattr(p, "idx") else str(p) for p in path)
-        out.append((key, np.asarray(leaf)))
-    return out
+    return [(path_key(path), leaf) for path, leaf in flat]
+
+
+def encode_array(arr: Any) -> bytes:
+    """Raw C-order bytes of an array — dtype-agnostic (bf16 and other
+    ml_dtypes included), the wire encoding of transport chunks."""
+    return np.ascontiguousarray(np.asarray(arr)).tobytes()
+
+
+def decode_array(data: bytes, dtype: str, shape: Tuple[int, ...]) -> np.ndarray:
+    """Inverse of ``encode_array`` given the (dtype, shape) sidecar; the
+    re-view never upcasts exotic dtypes."""
+    return np.frombuffer(data, jax.numpy.dtype(dtype)).reshape(shape)
 
 
 def save_pytree(tree: Any) -> bytes:
     buf = io.BytesIO()
     arrays = {}
     exotic: Dict[str, Dict] = {}
-    for key, arr in _flatten_with_paths(tree):
+    for key, leaf in flatten_with_paths(tree):
+        arr = np.asarray(leaf)
         if np.dtype(arr.dtype).isbuiltin != 1:      # ml_dtypes et al.
             exotic[key] = {"dtype": arr.dtype.name,
                            "shape": list(arr.shape)}
-            arrays[key] = np.frombuffer(arr.tobytes(), np.uint8)
+            arrays[key] = np.frombuffer(encode_array(arr), np.uint8)
         else:
             arrays[key] = arr
     if exotic:
@@ -66,14 +85,12 @@ def load_pytree(data: bytes, like: Any) -> Any:
     flat, treedef = jax.tree_util.tree_flatten_with_path(like)
     leaves = []
     for path, leaf in flat:
-        key = "/".join(str(p.key) if hasattr(p, "key") else str(p.idx)
-                       if hasattr(p, "idx") else str(p) for p in path)
+        key = path_key(path)
         arr = arrays[key]
         if key in exotic:
             meta = exotic[key]
-            arr = np.frombuffer(arr.tobytes(),
-                                jax.numpy.dtype(meta["dtype"])
-                                ).reshape(meta["shape"])
+            arr = decode_array(arr.tobytes(), meta["dtype"],
+                               tuple(meta["shape"]))
         leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
@@ -86,26 +103,67 @@ class PolicyStore:
     version that was pruned degrades to the oldest retained one (counted
     in ``stale_fetches``) — a sampler behind a long WAN delay should get
     the closest surviving policy, not an exception.
+
+    The store is also the chunk-index backend of the shard-streamed
+    transport (``repro.transport``): content-addressed chunks live in
+    ``put_chunk``/``get_chunk`` and each published version's *manifest*
+    rides the same versioned ``_store`` (same prune/degrade semantics).
+    Chunks no longer referenced by any retained manifest are garbage
+    collected on prune, so a long run holds at most ``keep`` manifests
+    plus their live chunk set.
+
+    Bookkeeping is bounded: the exact set of ever-published versions is
+    trimmed to the most recent ``track`` entries; versions older than the
+    tracking horizon are treated as published-then-pruned (degrade +
+    ``stale_fetches``) rather than growing an unbounded set.
+    ``bytes_published`` counts net-new bytes only — re-publishing a
+    version counts the delta against the blob it replaces, and a chunk
+    already in the index costs nothing.
     """
 
-    def __init__(self, keep: int = 8) -> None:
+    def __init__(self, keep: int = 8, track: int = 512) -> None:
         self._lock = threading.Lock()
         self._store: Dict[int, bytes] = {}
-        self._published: set = set()     # every version ever published
+        self._published: set = set()     # recent versions, bounded by track
+        self._forgotten_below: Optional[int] = None  # bookkeeping horizon
         self._latest = -1
         self._keep = keep
+        self._track = max(track, keep)
+        # chunk index (transport backend)
+        self._chunks: Dict[str, bytes] = {}
+        self._chunk_refs: Dict[int, frozenset] = {}  # version -> chunk hashes
         self.bytes_published = 0
         self.stale_fetches = 0
+        self.chunks_gced = 0
 
+    # ---- whole-blob / manifest versions ---------------------------------
     def publish(self, version: int, data: bytes) -> None:
         with self._lock:
+            prev = self._store.get(version)
             self._store[version] = data
             self._published.add(version)
             self._latest = max(self._latest, version)
-            self.bytes_published += len(data)
-            stale = sorted(self._store)[:-self._keep]
-            for v in stale:
-                del self._store[v]
+            self.bytes_published += len(data) - (len(prev) if prev is not None
+                                                 else 0)
+            self._prune_locked()
+
+    def _prune_locked(self) -> None:
+        stale = sorted(self._store)[:-self._keep]
+        released = False
+        for v in stale:
+            del self._store[v]
+            released |= self._chunk_refs.pop(v, None) is not None
+        if released:
+            alive = frozenset().union(*self._chunk_refs.values()) \
+                if self._chunk_refs else frozenset()
+            dead = [h for h in self._chunks if h not in alive]
+            for h in dead:
+                del self._chunks[h]
+            self.chunks_gced += len(dead)
+        if len(self._published) > self._track:
+            evicted = sorted(self._published)[:-self._track]
+            self._published.difference_update(evicted)
+            self._forgotten_below = evicted[-1] + 1
 
     def latest_version(self) -> int:
         with self._lock:
@@ -119,10 +177,73 @@ class PolicyStore:
                 return self._latest, self._store[self._latest]
             if version in self._store:
                 return version, self._store[version]
-            if version in self._published:      # published once, pruned
+            if version in self._published or (
+                    self._forgotten_below is not None
+                    and version < self._forgotten_below):
+                # published once, pruned (or below the bookkeeping horizon)
                 self.stale_fetches += 1
                 oldest = min(self._store)
                 return oldest, self._store[oldest]
             raise KeyError(
                 f"version {version} was never published (retained: "
                 f"{sorted(self._store)}, latest: {self._latest})")
+
+    # ---- chunk index (transport backend) --------------------------------
+    def put_chunk(self, chunk_hash: str, data: bytes) -> bool:
+        """Insert a content-addressed chunk; returns True when net-new
+        (and only then counts its bytes as published)."""
+        with self._lock:
+            if chunk_hash in self._chunks:
+                return False
+            self._chunks[chunk_hash] = data
+            self.bytes_published += len(data)
+            return True
+
+    def has_chunk(self, chunk_hash: str) -> bool:
+        with self._lock:
+            return chunk_hash in self._chunks
+
+    def get_chunk(self, chunk_hash: str) -> bytes:
+        with self._lock:
+            try:
+                return self._chunks[chunk_hash]
+            except KeyError:
+                raise KeyError(
+                    f"chunk {chunk_hash} not in store (referenced by a "
+                    "pruned manifest, or never published)") from None
+
+    def get_chunks(self, chunk_hashes) -> Dict[str, bytes]:
+        """Atomic multi-get: a subscriber snapshots every chunk it is
+        about to transfer under one lock, so a concurrent publisher
+        pruning the manifest mid-(simulated)-transfer cannot yank chunks
+        from under it."""
+        with self._lock:
+            missing = [h for h in chunk_hashes if h not in self._chunks]
+            if missing:
+                raise KeyError(
+                    f"{len(missing)} chunks not in store (first: "
+                    f"{missing[0]}) — referenced by a pruned manifest, "
+                    "or never published")
+            return {h: self._chunks[h] for h in chunk_hashes}
+
+    def publish_manifest(self, version: int, manifest_blob: bytes,
+                         chunk_hashes) -> None:
+        """Version a transport manifest (its JSON bytes ride ``_store``
+        with the blob semantics) and pin its chunks against GC."""
+        with self._lock:
+            missing = [h for h in chunk_hashes if h not in self._chunks]
+            if missing:
+                raise KeyError(f"manifest {version} references "
+                               f"{len(missing)} chunks not in the store "
+                               f"(first: {missing[0]}) — put_chunk first")
+            self._chunk_refs[version] = frozenset(chunk_hashes)
+        self.publish(version, manifest_blob)
+
+    @property
+    def num_chunks(self) -> int:
+        with self._lock:
+            return len(self._chunks)
+
+    def chunk_index_bytes(self) -> int:
+        with self._lock:
+            return sum(len(d) for d in self._chunks.values())

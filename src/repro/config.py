@@ -255,6 +255,12 @@ class HeteroConfig:
     sync_interval_steps: int = 1     # learner checkpoint publish period
     window_s: float = 1800.0         # rollout eligibility window
     seed: int = 0
+    # Simulated WAN bandwidth of the model-sync link (Mbit/s). The default
+    # inf reproduces the legacy payload-blind delay model bit-for-bit; a
+    # finite value adds payload_bytes/bandwidth serialization time on top
+    # of the sampled propagation delay (latency.sync_delay_s), so D_M
+    # finally depends on how many bytes the transport actually moves.
+    bandwidth_mbps: float = float("inf")
     # Sampler-node device mesh as "DxM" (serve-mode tensor parallelism);
     # same conventions as TrainConfig.mesh. All sampler nodes share it —
     # HeteroRL's point is that it can differ from the learner's mesh.

@@ -1,9 +1,9 @@
 from repro.hetero.events import EventSim, Transport
-from repro.hetero.latency import DISTRIBUTIONS, sample_delay
+from repro.hetero.latency import DISTRIBUTIONS, sample_delay, sync_delay_s
 from repro.hetero.nodes import LearnerNode, RolloutBatch, SamplerNode
 from repro.hetero.runtime import HeteroRuntime, run_online
 from repro.hetero.threads import ThreadedHeteroRuntime
 
-__all__ = ["EventSim", "Transport", "sample_delay", "DISTRIBUTIONS",
-           "LearnerNode", "SamplerNode", "RolloutBatch", "HeteroRuntime",
-           "run_online", "ThreadedHeteroRuntime"]
+__all__ = ["EventSim", "Transport", "sample_delay", "sync_delay_s",
+           "DISTRIBUTIONS", "LearnerNode", "SamplerNode", "RolloutBatch",
+           "HeteroRuntime", "run_online", "ThreadedHeteroRuntime"]

@@ -32,3 +32,19 @@ def sample_delay(rng: np.random.Generator, hcfg: HeteroConfig) -> float:
     else:
         raise ValueError(f"unknown delay distribution {dist!r}")
     return float(np.clip(d, hcfg.delay_min_s, hcfg.delay_max_s))
+
+
+def sync_delay_s(rng: np.random.Generator, hcfg: HeteroConfig,
+                 payload_bytes: int = 0) -> float:
+    """Payload-aware model-sync delay: sampled propagation (D_M as above,
+    clipped) plus ``payload_bytes / bandwidth`` serialization time. With
+    ``bandwidth_mbps=inf`` (the default) or zero payload this is exactly
+    ``sample_delay`` — same rng draw, bit-compatible with the legacy
+    payload-blind model, so the ``constant`` distribution and existing
+    table benchmarks reproduce unchanged."""
+    from repro.transport.link import serialization_seconds
+    base = sample_delay(rng, hcfg)
+    if payload_bytes <= 0:
+        return base
+    return base + serialization_seconds(
+        payload_bytes, getattr(hcfg, "bandwidth_mbps", float("inf")))

@@ -19,16 +19,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import PolicyStore, load_pytree, save_pytree
+from repro.checkpoint import PolicyStore
 from repro.config import HeteroConfig, ModelConfig, RLConfig, TrainConfig
 from repro.core.diagnostics import MetricsHistory
 from repro.data import PromptPipeline, score_rollouts
 from repro.data.tasks import ArithmeticTask, Tokenizer
 from repro.hetero.events import EventSim, Transport
-from repro.hetero.latency import sample_delay
+from repro.hetero.latency import sync_delay_s
 from repro.parallel import ExecutionPlan, plan_from_flag
 from repro.sampling import generate, token_logps
 from repro.training import TrainState, jit_train_step
+from repro.transport import ChunkSubscriber, SimulatedLink, publish_params
 
 
 @dataclasses.dataclass
@@ -67,6 +68,12 @@ class SamplerNode:
         self.params = self.plan.device_put_params(cfg, params, copy=True)
         self.store = store
         self.hcfg = hcfg
+        # shard-streamed checkpoint client: chunk cache + WAN link of this
+        # node (repro.transport) — syncs move only the chunks this node's
+        # plan needs whose content changed since the last sync
+        self.link = SimulatedLink(
+            bandwidth_mbps=getattr(hcfg, "bandwidth_mbps", float("inf")))
+        self.subscriber = ChunkSubscriber(store, self.link)
         self.engine = engine or rl.engine
         # backend of the App. B.1 recompute — follows the learner's
         # TrainConfig.logprob_impl so A/B runs switch both halves
@@ -139,18 +146,78 @@ class SamplerNode:
                             version=self.version, created_s=now_s,
                             sampler_id=self.sid)
 
-    def sync(self) -> None:
-        """Load the latest published checkpoint (post-delay) and place it
-        onto this node's execution plan."""
-        v, data = self.store.fetch()
-        if v > self.version:
-            self.params = self.plan.device_put_params(
-                self.cfg, load_pytree(data, self.params))
-            self.version = v
-            self.syncs += 1
+    def sync(self, plan: Optional[ExecutionPlan] = None) -> int:
+        """Fetch the newest published checkpoint through the chunk
+        transport (delta-synced against this node's local cache) and
+        place it onto this node's execution plan. Returns the simulated
+        bytes that moved on the wire (manifest + missing chunks), which
+        feeds the payload-aware delay of the *next* sync.
 
-    def next_delay(self) -> float:
-        return sample_delay(self.rng, self.hcfg)
+        ``plan`` re-fits onto a changed ``ExecutionPlan`` (elastic sampler
+        mesh: device loss/gain mid-run) — cached chunks are re-assembled
+        and placed on the new shard grid, so an unchanged version re-fits
+        without moving chunk bytes."""
+        refit = plan is not None and plan != self.plan
+        latest = self.store.latest_version()
+        if latest < 0 or (latest <= self.version and not refit):
+            if refit:
+                # nothing (newer) published: re-place the live params so
+                # plan and placement never disagree
+                self.plan = plan
+                self.params = self.plan.device_put_params(
+                    self.cfg, self.params, copy=True)
+            return 0
+        if refit:
+            self.plan = plan
+        for attempt in range(3):
+            try:
+                v, host_tree, stats = self.subscriber.sync(
+                    self.params, cfg=self.cfg, plan=self.plan)
+                break
+            except KeyError:
+                # threaded runtime race: the publisher pruned the fetched
+                # manifest's chunks between fetch and snapshot — retry
+                # against the newest version (bounded; chunks of a
+                # retained manifest are pinned against GC)
+                if attempt == 2:
+                    raise
+        if v > self.version or refit:
+            self.params = self.plan.device_put_params(self.cfg, host_tree)
+            if v > self.version:
+                self.version = v
+                self.syncs += 1
+        return stats.bytes_on_wire
+
+    def next_delay(self, payload_bytes: int = 0) -> float:
+        return sync_delay_s(self.rng, self.hcfg, payload_bytes)
+
+    def link_stats(self) -> Dict[str, float]:
+        """Per-node link telemetry: bytes on wire, dedup ratio (needed
+        refs served from cache), simulated serialization seconds."""
+        sub = self.subscriber
+        total = sub.chunks_fetched + sub.chunk_hits
+        return {"sampler": float(self.sid), "syncs": float(self.syncs),
+                "bytes_on_wire": float(self.link.bytes_on_wire),
+                "sync_seconds": float(self.link.seconds),
+                "chunks_fetched": float(sub.chunks_fetched),
+                "chunk_hits": float(sub.chunk_hits),
+                "dedup_ratio": sub.chunk_hits / total if total else 0.0}
+
+
+def link_telemetry(samplers: List["SamplerNode"],
+                   learner: "LearnerNode") -> List[Dict[str, float]]:
+    """Per-sampler weight-transport telemetry (bytes on wire, dedup
+    ratio, simulated sync seconds) plus the learner's publish-side stream
+    accounting as a pseudo-row (sampler=-1) — the one construction site
+    both hetero runtimes report from."""
+    rows = [s.link_stats() for s in samplers]
+    rows.append({"sampler": -1.0,
+                 "syncs": float(learner.step),
+                 "bytes_on_wire": float(learner.bytes_streamed),
+                 "sync_seconds": 0.0,
+                 "chunks_fetched": float(learner.chunks_streamed),
+                 "chunk_hits": 0.0, "dedup_ratio": 0.0})
+    return rows
 
 
 class LearnerNode:
@@ -175,11 +242,21 @@ class LearnerNode:
         self.step = 0
         self.discarded = 0
         self.history = MetricsHistory()
+        # cumulative publish telemetry (net-new bytes/chunks streamed)
+        self.bytes_streamed = 0
+        self.chunks_streamed = 0
+        self.publish_stats = None
         self._publish()
 
     def _publish(self) -> None:
-        self.store.publish(self.step, save_pytree(
-            self.plan.host_gather(self.state.params)))
+        """Stream this step's params into the store as per-shard,
+        content-addressed chunks (repro.transport) — each shard's host
+        view is pulled device-locally, no full host-gather — plus the
+        version manifest. Unchanged chunks cost nothing."""
+        self.publish_stats = publish_params(
+            self.store, self.step, self.plan, self.cfg, self.state.params)
+        self.bytes_streamed += self.publish_stats.bytes_new
+        self.chunks_streamed += self.publish_stats.chunks_new
 
     def receive(self, now_s: float, batch: RolloutBatch) -> None:
         self.buffer.append((now_s, batch))

@@ -24,7 +24,8 @@ from repro.config import HeteroConfig, ModelConfig, RLConfig, TrainConfig
 from repro.core.diagnostics import MetricsHistory
 from repro.data import ArithmeticTask, PromptPipeline, Tokenizer, score_rollouts
 from repro.hetero.events import EventSim, Transport
-from repro.hetero.nodes import LearnerNode, RolloutBatch, SamplerNode
+from repro.hetero.nodes import (LearnerNode, RolloutBatch, SamplerNode,
+                                link_telemetry)
 from repro.parallel import ExecutionPlan
 from repro.sampling import generate
 from repro.training import TrainState
@@ -77,8 +78,12 @@ class HeteroRuntime:
                           lambda s=s: self._sampler_gen_done(s))
 
     def _sampler_sync(self, s: SamplerNode) -> None:
-        s.sync()
-        self.sim.schedule(s.next_delay(), lambda s=s: self._sampler_sync(s))
+        # payload-aware D_M: the bytes this sync moved (manifest + missing
+        # chunks) charge serialization time on the *next* sync gap — with
+        # HeteroConfig.bandwidth_mbps=inf this is exactly the legacy delay
+        moved = s.sync()
+        self.sim.schedule(s.next_delay(moved),
+                          lambda s=s: self._sampler_sync(s))
 
     def _deliver(self, batch: RolloutBatch) -> None:
         self.learner.receive(self.sim.now, batch)
@@ -104,6 +109,12 @@ class HeteroRuntime:
             self.learner.history.append(self.learner.step,
                                         {"eval_score": score})
         self._maybe_start_step()
+
+    def sync_telemetry(self) -> List[Dict[str, float]]:
+        """Per-sampler weight-transport telemetry (bytes on wire, dedup
+        ratio, simulated sync seconds) plus the learner's publish-side
+        stream accounting."""
+        return link_telemetry(self.samplers, self.learner)
 
     # ---- drivers ----------------------------------------------------------
     def run(self, num_learner_steps: int) -> MetricsHistory:

@@ -22,8 +22,8 @@ from repro.checkpoint import PolicyStore
 from repro.config import HeteroConfig, ModelConfig, RLConfig, TrainConfig
 from repro.core.diagnostics import MetricsHistory
 from repro.data import ArithmeticTask, PromptPipeline, Tokenizer
-from repro.hetero.latency import sample_delay
-from repro.hetero.nodes import LearnerNode, RolloutBatch, SamplerNode
+from repro.hetero.nodes import (LearnerNode, RolloutBatch, SamplerNode,
+                                link_telemetry)
 from repro.parallel import ExecutionPlan
 from repro.training import TrainState
 
@@ -69,8 +69,21 @@ class ThreadedHeteroRuntime:
             except queue.Full:
                 pass                      # drop under backpressure
             if self._now_s() >= next_sync:
-                s.sync()
-                next_sync = self._now_s() + s.next_delay()
+                # chunked delta sync; the bytes moved charge serialization
+                # time on the next sync gap (no-op at bandwidth inf)
+                try:
+                    moved = s.sync()
+                except KeyError:
+                    # lost the publisher prune race even after retries:
+                    # skip this round rather than killing the daemon
+                    # thread — the next interval syncs a newer version
+                    moved = 0
+                next_sync = self._now_s() + s.next_delay(moved)
+
+    def sync_telemetry(self):
+        """Per-sampler link telemetry + learner publish accounting (same
+        shape as HeteroRuntime.sync_telemetry)."""
+        return link_telemetry(self.samplers, self.learner)
 
     def run(self, num_learner_steps: int) -> MetricsHistory:
         threads = [threading.Thread(target=self._sampler_loop, args=(s,),

@@ -1,0 +1,26 @@
+"""repro.transport — shard-streamed, delta-compressed weight distribution.
+
+The learner publishes per-shard, content-addressed chunks of each param
+leaf (``publish_params``); samplers subscribe with their ``ExecutionPlan``
+(``ChunkSubscriber``) and fetch only the chunks their plan needs, only
+when the content changed, over a ``SimulatedLink`` whose delay finally
+depends on the bytes moved. ``PolicyStore`` (repro.checkpoint) is the
+chunk-index/version backend.
+"""
+from repro.transport.chunks import (ChunkRef, assemble_leaf, chunk_host_leaf,
+                                    content_hash, overlaps, region_map,
+                                    shard_regions)
+from repro.transport.link import (LinkDropped, SimulatedLink,
+                                  SyncInterrupted)
+from repro.transport.manifest import LeafManifest, Manifest
+from repro.transport.publish import PublishStats, publish_params
+from repro.transport.subscribe import ChunkSubscriber, SyncStats
+
+__all__ = [
+    "ChunkRef", "LeafManifest", "Manifest",
+    "assemble_leaf", "chunk_host_leaf", "content_hash", "overlaps",
+    "region_map", "shard_regions",
+    "LinkDropped", "SimulatedLink", "SyncInterrupted",
+    "PublishStats", "publish_params",
+    "ChunkSubscriber", "SyncStats",
+]

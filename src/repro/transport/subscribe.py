@@ -1,0 +1,188 @@
+"""Subscriber half of the shard-streamed transport.
+
+A ``ChunkSubscriber`` is one sampler's checkpoint client: it pulls the
+newest manifest over its ``SimulatedLink``, computes the chunk set *its
+execution plan needs* (the chunks overlapping its plan's shard grid —
+optionally scoped to one host's device subset), delta-syncs against its
+local content-addressed cache (unchanged chunks never touch the wire),
+and survives a dropped link mid-transfer: partial byte progress is kept
+per chunk and the next sync resumes from the offset.
+
+Because assembly happens on host from cached chunks, a fetched version
+lands correctly on a *changed* plan too — elastic re-fit is just "sync
+with the new plan": cached chunks are re-tiled and ``device_put`` onto
+the new shard grid without moving a byte.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+import jax
+
+from repro.checkpoint.store import PolicyStore, path_key
+from repro.transport.chunks import (ChunkRef, assemble_leaf, overlaps,
+                                    shard_regions)
+from repro.transport.link import LinkDropped, SimulatedLink, SyncInterrupted
+from repro.transport.manifest import LeafManifest, Manifest
+
+
+@dataclasses.dataclass
+class SyncStats:
+    version: int = -1
+    manifest_bytes: int = 0
+    chunk_bytes: int = 0        # chunk payload moved this sync
+    bytes_resumed: int = 0      # skipped thanks to partial-progress resume
+    chunks_fetched: int = 0
+    chunk_hits: int = 0         # needed refs already in the local cache
+    seconds: float = 0.0        # simulated serialization seconds charged
+
+    @property
+    def bytes_on_wire(self) -> int:
+        return self.manifest_bytes + self.chunk_bytes
+
+    @property
+    def dedup_ratio(self) -> float:
+        """Fraction of needed chunk refs served from the local cache."""
+        total = self.chunks_fetched + self.chunk_hits
+        return self.chunk_hits / total if total else 0.0
+
+
+class ChunkSubscriber:
+    """Plan-scoped, delta-synced, resumable checkpoint client."""
+
+    def __init__(self, store: PolicyStore,
+                 link: Optional[SimulatedLink] = None) -> None:
+        self.store = store
+        self.link = link if link is not None else SimulatedLink()
+        self._cache: Dict[str, bytes] = {}
+        self._partial: Dict[str, int] = {}   # hash -> bytes received so far
+        # cumulative telemetry
+        self.syncs = 0
+        self.chunks_fetched = 0
+        self.chunk_hits = 0
+        self.bytes_fetched = 0
+        self.manifest_bytes = 0
+
+    # ---- need-set computation -------------------------------------------
+    def needed_refs(self, manifest: Manifest, *, plan=None, cfg=None,
+                    devices: Optional[Iterable] = None
+                    ) -> List[Tuple[LeafManifest, List[ChunkRef]]]:
+        """The publisher chunks this plan needs, per leaf: every chunk
+        overlapping a distinct shard region of the plan's fitted sharding.
+        ``devices`` scopes to one host's shard subset — a strict subset of
+        the manifest whenever the plan shards any leaf. Without device
+        scoping a plan's shard regions tile every leaf in full, so the
+        need-set is provably all chunks and the overlap scan is skipped."""
+        if plan is None or cfg is None or devices is None:
+            return [(lm, list(lm.chunks)) for lm in manifest.leaves]
+        from repro.checkpoint.store import flatten_with_paths
+        shardings = dict(flatten_with_paths(plan.param_shardings(cfg)))
+        out = []
+        for lm in manifest.leaves:
+            sharding = shardings.get(lm.key)
+            if sharding is None:
+                out.append((lm, list(lm.chunks)))
+                continue
+            regions = shard_regions(sharding, lm.shape, devices=devices)
+            need = [ref for ref in lm.chunks
+                    if any(overlaps(ref, start, cshape)
+                           for start, cshape, _ in regions)]
+            out.append((lm, need))
+        return out
+
+    # ---- sync ------------------------------------------------------------
+    def sync(self, like: Any, *, cfg=None, plan=None,
+             version: Optional[int] = None,
+             devices: Optional[Iterable] = None,
+             assemble: Optional[bool] = None
+             ) -> Tuple[int, Any, SyncStats]:
+        """Fetch ``version`` (newest when None) and assemble it into the
+        structure of ``like``. Returns ``(version, host_tree, stats)``;
+        ``host_tree`` is None for device-scoped fetches — those are
+        partial by construction, so ``assemble`` defaults to
+        ``devices is None`` and forcing it on a scoped fetch is an error.
+        Raises ``SyncInterrupted`` if the link drops; call again to
+        resume from the recorded byte offsets."""
+        if assemble is None:
+            assemble = devices is None
+        elif assemble and devices is not None:
+            raise ValueError("a device-scoped fetch is partial — it "
+                             "cannot assemble full leaves; pass "
+                             "assemble=False (or drop devices=)")
+        v, blob = self.store.fetch(version)
+        manifest = Manifest.from_json(blob)
+        stats = SyncStats(version=v, manifest_bytes=len(blob))
+        self.manifest_bytes += len(blob)
+        try:
+            stats.seconds += self.link.transfer(len(blob))
+        except LinkDropped:
+            raise SyncInterrupted(
+                "link dropped while fetching the manifest") from None
+        needed = self.needed_refs(manifest, plan=plan, cfg=cfg,
+                                  devices=devices)
+        missing, seen = [], set()
+        for _, refs in needed:
+            for ref in refs:
+                if ref.hash in seen:
+                    continue
+                seen.add(ref.hash)
+                if ref.hash in self._cache:
+                    stats.chunk_hits += 1
+                    self.chunk_hits += 1
+                else:
+                    missing.append(ref)
+        # atomic snapshot: grab every missing chunk under one store lock
+        # before paying the (long, interruptible) simulated transfers — a
+        # concurrent publisher pruning this manifest mid-sync cannot yank
+        # chunks from under us (content is hash-addressed, so a snapshot
+        # taken now stays valid across a resume)
+        payload = self.store.get_chunks([r.hash for r in missing])
+        for ref in missing:
+            self._fetch(ref, payload[ref.hash], stats)
+        tree = None
+        if assemble:
+            tree = self._assemble(manifest, like)
+        # cache hygiene: keep only chunks the current version references —
+        # the cache is bounded by one model copy, not the run length
+        keep = manifest.hashes()
+        self._cache = {h: d for h, d in self._cache.items() if h in keep}
+        self._partial = {h: n for h, n in self._partial.items() if h in keep}
+        self.syncs += 1
+        return v, tree, stats
+
+    def _fetch(self, ref: ChunkRef, data: bytes, stats: SyncStats) -> None:
+        got = self._partial.get(ref.hash, 0)
+        remaining = ref.nbytes - got
+        try:
+            stats.seconds += self.link.transfer(remaining)
+        except LinkDropped as e:
+            self._partial[ref.hash] = got + e.bytes_delivered
+            stats.chunk_bytes += e.bytes_delivered
+            self.bytes_fetched += e.bytes_delivered
+            raise SyncInterrupted(
+                f"link dropped {e.bytes_delivered} bytes into chunk "
+                f"{ref.hash} ({got + e.bytes_delivered}/{ref.nbytes} "
+                "received) — re-sync resumes from this offset") from e
+        self._partial.pop(ref.hash, None)
+        self._cache[ref.hash] = data
+        stats.chunk_bytes += remaining
+        stats.bytes_resumed += got
+        stats.chunks_fetched += 1
+        self.chunks_fetched += 1
+        self.bytes_fetched += remaining
+
+    def _assemble(self, manifest: Manifest, like: Any) -> Any:
+        by_key = {lm.key: lm for lm in manifest.leaves}
+        flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for path, _ in flat:
+            key = path_key(path)
+            lm = by_key.get(key)
+            if lm is None:
+                raise KeyError(f"leaf {key!r} missing from manifest "
+                               f"version {manifest.version}")
+            leaves.append(assemble_leaf(
+                lm.dtype, lm.shape,
+                [(ref, self._cache[ref.hash]) for ref in lm.chunks]))
+        return jax.tree_util.tree_unflatten(treedef, leaves)
