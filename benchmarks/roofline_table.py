@@ -1,6 +1,7 @@
 """Deliverable (g): aggregate the dry-run JSON records into the roofline
 table (per arch × shape × mesh: three terms, bottleneck, useful-FLOPs
-fraction, HBM fit)."""
+fraction, HBM fit), plus the analytic paged-decode bytes-per-token rows
+(gather-legacy O(pool) vs in-place kernel O(len) KV traffic)."""
 from __future__ import annotations
 
 import glob
@@ -10,6 +11,31 @@ import os
 RESULTS = os.environ.get("DRYRUN_RESULTS", "results/dryrun")
 
 
+def paged_decode_rows() -> list:
+    """Bytes-per-token model of the serving decode hot loop: the legacy
+    gather reads (and re-materializes) every slot's full page allotment
+    each step, the in-place kernel reads only the live pages — see
+    ``benchmarks/decode_bench.py`` for the measured twin of this table."""
+    from repro.config import DECODE_32K
+    from repro.configs import get_config
+
+    cfg = get_config("qwen2-7b")
+    page_size = 16
+    pool_len = DECODE_32K.seq_len                 # pages_per_slot * page
+    kv_bytes = 2 * cfg.num_kv_heads * cfg.head_dim * 2      # k+v, bf16
+    rows = ["roofline,paged-decode,arch,ctx,pool,kv_GiB_per_tok_gather,"
+            "kv_GiB_per_tok_kernel,ratio"]
+    for ctx in (2048, 8192, pool_len):
+        gather = cfg.num_layers * pool_len * kv_bytes        # O(pool)
+        live = -(-ctx // page_size) * page_size
+        kernel = cfg.num_layers * live * kv_bytes            # O(len)
+        rows.append(
+            f"roofline,paged-decode,{cfg.name},{ctx},{pool_len},"
+            f"{gather/2**30:.3f},{kernel/2**30:.3f},"
+            f"{gather/kernel:.1f}x")
+    return rows
+
+
 def run() -> list:
     files = sorted(glob.glob(os.path.join(RESULTS, "*.json")))
     rows = ["roofline,arch,shape,mesh,compute_ms,memory_ms,collective_ms,"
@@ -17,7 +43,7 @@ def run() -> list:
     if not files:
         rows.append("roofline,NO_RESULTS,run `python -m repro.launch."
                     "dryrun` first,,,,,,,,,")
-        return rows
+        return rows + paged_decode_rows()
     for fn in files:
         with open(fn) as f:
             r = json.load(f)
@@ -31,4 +57,4 @@ def run() -> list:
             f"{r.get('entry_arg_bytes_per_dev', 0)/2**30:.2f},"
             f"{ma.get('temp_size_in_bytes', 0)/2**30:.2f},"
             f"{r.get('hbm_fit_16g')}")
-    return rows
+    return rows + paged_decode_rows()

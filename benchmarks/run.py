@@ -27,6 +27,7 @@ MODULES = [
     ("hyperparams", "benchmarks.hyperparams"),
     ("serve", "benchmarks.serve_throughput"),
     ("logprob", "benchmarks.logprob_bench"),
+    ("decode", "benchmarks.decode_bench"),
     ("scaling", "benchmarks.scaling_bench"),
     ("sync", "benchmarks.sync_bench"),
 ]
@@ -37,8 +38,10 @@ MODULES = [
 # "scaling" proves the sharded train step runs at data-axis sizes >1 —
 # its workers are subprocesses, so the forced device count never leaks;
 # "sync" asserts the chunked weight transport beats whole-blob sync and
-# stays byte-identical — its mesh part subprocesses when devices < 4)
-SMOKE_MODULES = ("fig2", "theory", "logprob", "scaling", "sync")
+# stays byte-identical — its mesh part subprocesses when devices < 4;
+# "decode" A/Bs the paged-decode hot loop (gather-legacy vs in-place
+# kernel/ref) on the temp-bytes proxy and emits BENCH_decode.json)
+SMOKE_MODULES = ("fig2", "theory", "logprob", "decode", "scaling", "sync")
 
 
 def main() -> None:

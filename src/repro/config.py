@@ -76,8 +76,15 @@ class ModelConfig:
     scale_embed: bool = False       # multiply embeddings by sqrt(d) (gemma)
 
     # implementation knobs (not architecture) -----------------------------
-    attn_impl: str = "chunked"      # naive | chunked  (pure-jnp paths)
+    attn_impl: str = "chunked"      # naive | chunked | pallas
     attn_chunk: int = 512           # query/kv block for chunked attention
+    # Paged-decode backend for the continuous engine's hot loop
+    # (repro.kernels.ops.paged_decode): "gather" materializes the logical
+    # KV view and stays bit-identical to the dense decode path (the
+    # static ≡ continuous parity contract — hence the default); "auto"
+    # picks the in-place Pallas kernel on TPU / its jnp ref elsewhere;
+    # "pallas" | "ref" force a backend.
+    paged_attn_impl: str = "gather"
     remat: bool = True              # activation checkpointing per block
     # residual-stream sharding constraint between blocks (set by the
     # launcher; nested tuples of mesh axis names / None). E.g. Megatron-SP
@@ -265,6 +272,10 @@ class HeteroConfig:
     # same conventions as TrainConfig.mesh. All sampler nodes share it —
     # HeteroRL's point is that it can differ from the learner's mesh.
     sampler_mesh: str = "1x1"
+    # Sampler-side paged-decode backend override (ModelConfig.
+    # paged_attn_impl vocabulary; None keeps the arch default). Lets the
+    # hetero sweeps A/B the in-place kernel against the gather path.
+    paged_attn_impl: Optional[str] = None
 
 
 def smoke_variant(cfg: ModelConfig, **overrides) -> ModelConfig:

@@ -56,8 +56,16 @@ class SamplerNode:
                  hcfg: HeteroConfig, seed: int,
                  engine: Optional[str] = None,
                  logprob_impl: str = "fused",
+                 paged_attn_impl: Optional[str] = None,
                  plan: Optional[ExecutionPlan] = None) -> None:
         self.sid = sid
+        # sampler-side paged-decode backend (explicit arg beats the
+        # HeteroConfig knob beats the arch default) — the A/B lever for
+        # hetero sweeps: a different impl is a different jit key, so the
+        # replaced config keeps executables per-backend.
+        pa = paged_attn_impl or hcfg.paged_attn_impl
+        if pa is not None:
+            cfg = dataclasses.replace(cfg, paged_attn_impl=pa)
         self.cfg, self.rl = cfg, rl
         self.pipeline, self.task, self.tok = pipeline, task, tok
         # serve-mode execution plan of this node (defaults to the
@@ -167,12 +175,15 @@ class SamplerNode:
                 self.params = self.plan.device_put_params(
                     self.cfg, self.params, copy=True)
             return 0
-        if refit:
-            self.plan = plan
+        # fetch against the *target* plan but commit it to self only
+        # after the transport succeeds: if every retry raises, plan and
+        # param placement must both stay on the old mesh (a half-applied
+        # refit would make the next sync's refit check a false negative)
+        target = plan if refit else self.plan
         for attempt in range(3):
             try:
                 v, host_tree, stats = self.subscriber.sync(
-                    self.params, cfg=self.cfg, plan=self.plan)
+                    self.params, cfg=self.cfg, plan=target)
                 break
             except KeyError:
                 # threaded runtime race: the publisher pruned the fetched
@@ -181,6 +192,8 @@ class SamplerNode:
                 # retained manifest are pinned against GC)
                 if attempt == 2:
                     raise
+        if refit:
+            self.plan = target
         if v > self.version or refit:
             self.params = self.plan.device_put_params(self.cfg, host_tree)
             if v > self.version:

@@ -22,6 +22,20 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
+def _fit_block(n: int, cap: int) -> int:
+    """Largest block ≤ cap that divides n exactly, preferring 8-aligned
+    sublane counts — the fused_logprob trick, so real model shapes
+    (e.g. Sq = 160 or odd tails) hit the kernel instead of asserting."""
+    cap = min(cap, n)
+    for b in range(cap - cap % 8, 0, -8):
+        if n % b == 0:
+            return b
+    for b in range(cap, 0, -1):
+        if n % b == 0:
+            return b
+    return n
+
+
 def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
             scale: float, causal: bool, window: Optional[int],
             softcap: Optional[float], bq: int, bk: int, nk: int):
@@ -89,9 +103,8 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     b, sq, hq, d = q.shape
     sk, hkv = k.shape[1], k.shape[2]
     rep = hq // hkv
-    bq = min(block_q, sq)
-    bk = min(block_k, sk)
-    assert sq % bq == 0 and sk % bk == 0, (sq, sk, bq, bk)
+    bq = _fit_block(sq, block_q)
+    bk = _fit_block(sk, block_k)
     nq, nk = sq // bq, sk // bk
 
     qr = q.transpose(0, 2, 1, 3).reshape(b * hq, sq, d)

@@ -17,6 +17,8 @@ from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.fused_logprob import (chunked_logprob as _chunked_logprob,
                                          fused_logprob as _fused_logprob)
+from repro.kernels.paged_attention import (paged_attention as _paged,
+                                           paged_decode_ref as _paged_ref)
 from repro.kernels.ssd_scan import ssd_scan as _ssd_scan
 
 
@@ -34,6 +36,68 @@ def flash_attention(q, k, v, *, causal: bool = True,
     interp = (not on_tpu()) if interpret is None else interpret
     return _flash(q, k, v, causal=causal, window=window, softcap=softcap,
                   block_q=block_q, block_k=block_k, interpret=interp)
+
+
+PAGED_IMPLS = ("auto", "pallas", "ref", "gather")
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "window", "softcap",
+                                             "impl", "interpret"))
+def paged_decode(q, kp, vp, page_table, lengths, *, kind: str = "causal",
+                 window: Optional[int] = None,
+                 softcap: Optional[float] = None,
+                 impl: Optional[str] = None,
+                 interpret: Optional[bool] = None):
+    """Decode-step attention against paged KV pools — the serving hot loop.
+
+    q (B, 1, Hq, D) one query token per slot (``decode_attention``'s
+    layout); kp/vp (num_pages, page_size, Hkv, D) page pools; page_table
+    (B, npages); lengths (B,) valid tokens per slot (current token's k/v
+    already scattered). Returns (B, 1, Hq, D).
+
+    ``impl`` selects the backend (``ModelConfig.paged_attn_impl``):
+      - "gather" (the ModelConfig default): materialize the logical
+        (B, npages·page_size, Hkv, D) view and run ``decode_attention``
+        over it — bit-identical to the pre-kernel path (the static ≡
+        continuous engine parity contract), O(npages) bytes/token. The
+        engine narrows ``page_table`` to the live high-water mark before
+        calling, so even this path stops touching the whole pool.
+      - "ref": ``paged_decode_ref`` — per-page online softmax, no
+        materialized view, GSPMD-native (kv-heads shard over 'model').
+      - "pallas": the Mosaic kernel, pages DMA'd in place. pallas_call
+        has no GSPMD partitioning rules: on a multi-device mesh call it
+        under shard_map with kv-heads (and the grouped q heads) split
+        over 'model' — same caveat as ``fused_token_logprob``.
+      - None / "auto": pallas on TPU, ref elsewhere.
+
+    ``kind``/``window`` follow ``decode_attention``: the sliding-window
+    band applies only when kind == "local".
+    """
+    if impl not in PAGED_IMPLS + (None,):
+        raise ValueError(f"unknown paged-attention impl {impl!r}")
+    if impl in (None, "auto"):
+        impl = "pallas" if on_tpu() else "ref"
+    if kind not in ("causal", "local"):
+        raise ValueError(f"paged decode is causal-only, got kind={kind!r}")
+    eff_window = window if kind == "local" else None
+    if impl == "gather":
+        from repro.models.attention import decode_attention
+        b = q.shape[0]
+        npages, page_size = page_table.shape[1], kp.shape[1]
+        lview = npages * page_size
+        kv_shape = (b, lview, kp.shape[2], kp.shape[3])
+        kc = kp[page_table].reshape(kv_shape)
+        vc = vp[page_table].reshape(kv_shape)
+        return decode_attention(q, kc, vc, pos=lengths - 1, kind=kind,
+                                window=window, softcap=softcap)
+    if impl == "ref":
+        o = _paged_ref(q[:, 0], kp, vp, page_table, lengths,
+                       window=eff_window, softcap=softcap)
+    else:
+        interp = (not on_tpu()) if interpret is None else interpret
+        o = _paged(q[:, 0], kp, vp, page_table, lengths,
+                   window=eff_window, softcap=softcap, interpret=interp)
+    return o[:, None]
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))

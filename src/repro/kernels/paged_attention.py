@@ -1,0 +1,230 @@
+"""Paged-attention decode Pallas TPU kernel (+ pure-JAX twin).
+
+One decode step of the continuous-batching engine attends a single query
+token per slot against that slot's KV pages *in place* — the pools from
+``repro.sampling.paged_cache`` are never regathered into a dense
+``(B, pages_per_slot·page_size, Hkv, D)`` logical view (the legacy path's
+O(pool) HBM traffic per token; see ``repro.kernels.ops.paged_decode``).
+
+Kernel layout:
+
+- grid ``(slot, kv_head, logical_page)`` with the page axis innermost so
+  the online-softmax accumulators (m, l, acc) live in VMEM scratch across
+  page iterations — the flash-attention recurrence over pages;
+- the block table and per-slot ``lengths`` ride in as scalar-prefetch
+  operands (``pltpu.PrefetchScalarGridSpec``), so the kv BlockSpec index
+  map resolves ``table[slot, j]`` to a physical page id before each grid
+  step issues its DMA;
+- pages at or past ``ceil(lengths[slot]/page_size)`` are *dead*: their
+  index map re-points at the slot's last live page (same block index ⇒
+  Pallas skips the copy — no DMA, and ``pl.when`` skips the compute), so
+  bytes and FLOPs scale with the slot's true context length, not the
+  allocator's ``pages_per_slot`` capacity;
+- GQA is resolved in the index maps: all ``rep = Hq // Hkv`` query heads
+  of one kv head run in a single kernel instance against one page fetch;
+- masking matches ``repro.models.attention.decode_attention``: key
+  positions ``idx <= pos`` (with ``pos = lengths - 1``), plus the
+  sliding-window band and attention-logit softcap. Masked positions are
+  zeroed in ``v`` (not just NEG_INF'd in the scores) so garbage in dead
+  page tails — scratch-page contents included, even NaNs — can never
+  reach a live slot's output.
+
+``paged_decode_ref`` is the jnp twin (``lax.fori_loop`` over live pages
+with running (m, l, acc)): the CPU oracle and the lowering path, the same
+pairing as ``chunked_attention`` ↔ ``flash_attention``. Its loop bound is
+the *batch-max* live page count, so its bytes also scale with occupancy
+rather than pool capacity.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _mask_scores_and_values(s, v, j, page_size, length, window):
+    """Apply the decode validity band to one page block.
+
+    s (R, page) scores, v (page, D) values; returns masked (s, v) where
+    invalid key positions are NEG_INF in s and *zero* in v — the zeroing
+    is what keeps NaN/garbage in unwritten page tails out of ``p @ v``.
+    """
+    def band(col):
+        ok = col < length
+        if window is not None:
+            ok &= col > length - 1 - window
+        return ok
+
+    cols_s = j * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, page_size), 1)
+    cols_v = j * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (page_size, 1), 0)
+    s = jnp.where(band(cols_s), s, NEG_INF)
+    v = jnp.where(band(cols_v), v, 0.0)
+    return s, v
+
+
+def _kernel(table_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
+            m_scr, l_scr, acc_scr, *, scale: float, window: Optional[int],
+            softcap: Optional[float], page_size: int, npages: int):
+    s_id = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = lengths_ref[s_id]
+    live = j * page_size < length
+
+    @pl.when(live)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)               # (rep, D)
+        k = k_ref[0, :, 0].astype(jnp.float32)            # (page, D)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * scale                                     # (rep, page)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        s, v = _mask_scores_and_values(s, v, j, page_size, length, window)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1)
+        acc_scr[...] = (acc_scr[...] * alpha[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_scr[...] = m_new
+
+    @pl.when(j == npages - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def paged_attention(q: jax.Array, kp: jax.Array, vp: jax.Array,
+                    page_table: jax.Array, lengths: jax.Array, *,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    interpret: bool = False) -> jax.Array:
+    """Decode-step attention against paged KV pools, in place.
+
+    q (B, Hq, D) single query token per slot; kp/vp
+    (num_pages, page_size, Hkv, D) page pools; page_table (B, npages)
+    int32 slot→physical-page map; lengths (B,) int32 valid tokens per
+    slot (``pos + 1`` — the current token's k/v must already be
+    scattered into the pools). Returns (B, Hq, D) in q.dtype.
+    """
+    b, hq, d = q.shape
+    num_pages, page_size, hkv, dk = kp.shape
+    assert d == dk and hq % hkv == 0, (q.shape, kp.shape)
+    rep = hq // hkv
+    npages = page_table.shape[1]
+    qr = q.reshape(b, hkv, rep, d)
+
+    def q_map(s, h, j, table_ref, lengths_ref):
+        del table_ref, lengths_ref, j
+        return (s, h, 0, 0)
+
+    def kv_map(s, h, j, table_ref, lengths_ref):
+        # dead pages re-point at the slot's last live page: identical
+        # consecutive block indices make Pallas skip the DMA, and the
+        # body's pl.when(live) skips the compute.
+        length = lengths_ref[s]
+        last_live = jnp.maximum(pl.cdiv(length, page_size) - 1, 0)
+        jj = jnp.minimum(j, last_live)
+        return (table_ref[s, jj], 0, h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, npages),
+        in_specs=[
+            pl.BlockSpec((1, 1, rep, d), q_map),
+            pl.BlockSpec((1, page_size, 1, d), kv_map),
+            pl.BlockSpec((1, page_size, 1, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, d), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((rep,), jnp.float32),
+            pltpu.VMEM((rep,), jnp.float32),
+            pltpu.VMEM((rep, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=d ** -0.5, window=window,
+                          softcap=softcap, page_size=page_size,
+                          npages=npages),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, rep, d), q.dtype),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), lengths.astype(jnp.int32), qr, kp, vp)
+    return out.reshape(b, hq, d)
+
+
+def paged_decode_ref(q: jax.Array, kp: jax.Array, vp: jax.Array,
+                     page_table: jax.Array, lengths: jax.Array, *,
+                     window: Optional[int] = None,
+                     softcap: Optional[float] = None) -> jax.Array:
+    """Pure-JAX twin of ``paged_attention``: ``fori_loop`` over logical
+    pages with running (m, l, acc), bounded by the batch-max live page
+    count so work scales with occupancy. Same shapes/semantics as the
+    kernel; this is the CPU oracle and the GSPMD-native lowering path
+    (the per-page gather partitions cleanly with kv-heads on 'model')."""
+    b, hq, d = q.shape
+    page_size, hkv = kp.shape[1], kp.shape[2]
+    rep = hq // hkv
+    npages = page_table.shape[1]
+    scale = d ** -0.5
+    # keep every pool-sized operand in the pool dtype and upcast inside
+    # the dots (preferred_element_type): an explicit kp.astype(f32) is
+    # loop-invariant, so XLA hoists it and converts the *entire pool*
+    # once — the O(pool) temp buffer this path exists to avoid.
+    qg = q.reshape(b, hkv, rep, d).astype(kp.dtype)
+    table = page_table.astype(jnp.int32)
+    lengths = lengths.astype(jnp.int32)
+
+    def body(j, carry):
+        m_run, l_run, acc = carry
+        phys = jax.lax.dynamic_slice_in_dim(table, j, 1, axis=1)[:, 0]
+        k = kp[phys]                                      # (B, page, Hkv, D)
+        v = vp[phys]
+        s = jnp.einsum("bgrd,bpgd->bgrp", qg, k,
+                       preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        idx = j * page_size + jnp.arange(page_size)
+        valid = idx[None, :] < lengths[:, None]           # (B, page)
+        if window is not None:
+            valid &= idx[None, :] > lengths[:, None] - 1 - window
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+        # zero masked values so garbage/NaN in dead tails (scratch page
+        # included) can never reach a live slot through 0 * NaN
+        v = jnp.where(valid[:, :, None, None], v, jnp.zeros((), v.dtype))
+        m_new = jnp.maximum(m_run, s.max(axis=-1))
+        alpha = jnp.exp(m_run - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l_run * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bgrp,bpgd->bgrd", p.astype(v.dtype), v,
+            preferred_element_type=jnp.float32)
+        return m_new, l_new, acc
+
+    m0 = jnp.full((b, hkv, rep), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, rep), jnp.float32)
+    a0 = jnp.zeros((b, hkv, rep, d), jnp.float32)
+    n_live = jnp.clip(-(-jnp.max(lengths) // page_size), 0, npages)
+    _, l_f, acc = jax.lax.fori_loop(0, n_live, body, (m0, l0, a0))
+    o = acc / jnp.maximum(l_f, 1e-30)[..., None]
+    return o.reshape(b, hq, d).astype(q.dtype)

@@ -55,6 +55,13 @@ def main() -> None:
     ap.add_argument("--mesh", default="1x1",
                     help="serve mesh DxM (batch over data × tensor "
                          "parallel over model)")
+    ap.add_argument("--paged-attn-impl", default=None,
+                    choices=("auto", "pallas", "ref", "gather"),
+                    help="paged-decode backend for the continuous "
+                         "engine (default: the arch's "
+                         "ModelConfig.paged_attn_impl — 'gather', the "
+                         "bit-exact legacy view; 'auto' = in-place "
+                         "Pallas kernel on TPU / jnp ref elsewhere)")
     ap.add_argument("--temperature", type=float, default=0.6)
     ap.add_argument("--top-k", type=int, default=20)
     ap.add_argument("--top-p", type=float, default=0.95)
@@ -62,6 +69,9 @@ def main() -> None:
     args = ap.parse_args()
 
     cfg = smoke(args.arch)
+    if args.paged_attn_impl:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, paged_attn_impl=args.paged_attn_impl)
     rl = RLConfig(temperature=args.temperature, top_k=args.top_k,
                   top_p=args.top_p, max_new_tokens=args.max_new,
                   engine=args.engine)

@@ -339,14 +339,21 @@ def _chunked_attention_legacy(q, k, v, *, pos_q, pos_k, kind="causal",
 
 
 def decode_attention(q, k_cache, v_cache, *, pos, kind="causal",
-                     window=4096, softcap=None):
+                     window=4096, softcap=None, length=None):
     """Single-token attention against a (B, Smax, Hkv, D) cache.
 
     q: (B, 1, Hq, D); pos: current position — a scalar, or a (B,) vector
     when rows decode at heterogeneous positions (continuous batching).
-    Entries > pos are masked.
+    Entries > pos are masked. ``length`` (static int) is an optional
+    upper bound on ``pos + 1``: entries at ``>= length`` are provably
+    masked, so the cache is sliced to ``length`` and the score/mask/
+    softmax work on the padded tail is skipped entirely — bit-identical
+    output (masked tail entries contribute exact zeros either way).
     """
     b, _, hq, d = q.shape
+    if length is not None and length < k_cache.shape[1]:
+        k_cache = k_cache[:, :length]
+        v_cache = v_cache[:, :length]
     smax, hkv = k_cache.shape[1], k_cache.shape[2]
     g, r = hkv, hq // hkv
     qg = q.reshape(b, 1, g, r, d)
@@ -398,8 +405,38 @@ def fill_ring(k: jax.Array, window: int) -> jax.Array:
     return jnp.take(k_last, idx, axis=1)
 
 
+def _standard_positions(pos) -> bool:
+    """Concrete positions must be the contiguous arange layout the flash
+    kernel's offset-derived masks assume; traced positions cannot be
+    inspected and are trusted (the documented ``impl="pallas"`` caveat —
+    in-repo jit callers guarantee it, the paged-prefill offset path
+    downgrades explicitly)."""
+    if isinstance(pos, jax.core.Tracer):
+        return True
+    arr = jnp.asarray(pos)
+    return bool((arr == jnp.arange(arr.shape[-1])).all())
+
+
 def attention(q, k, v, *, pos_q, pos_k, kind="causal", window=4096,
               softcap=None, impl="chunked", chunk=512):
+    """Full-sequence attention dispatch: naive | chunked | pallas.
+
+    ``impl="pallas"`` routes to the Mosaic flash kernel (interpret mode
+    off-TPU). The kernel derives its masks from absolute block offsets,
+    so it assumes the standard contiguous layout ``pos_q = arange(Sq)``,
+    ``pos_k = arange(Sk)`` with no PAD_POS sentinels — the model's
+    training/prefill forward. Concrete (eager) positions are checked and
+    quietly fall back to the jnp paths when they don't match; callers
+    under jit with offset or padded positions (paged chunked prefill)
+    must pick a jnp impl themselves.
+    """
+    if (impl == "pallas" and kind in ("causal", "local", "bidir")
+            and _standard_positions(pos_q) and _standard_positions(pos_k)):
+        from repro.kernels.ops import flash_attention
+        return flash_attention(q, k, v, causal=(kind != "bidir"),
+                               window=(window if kind == "local" else None),
+                               softcap=softcap,
+                               block_q=min(chunk, 128), block_k=min(chunk, 128))
     if impl == "naive" or q.shape[1] <= chunk:
         return naive_attention(q, k, v, pos_q=pos_q, pos_k=pos_k, kind=kind,
                                window=window, softcap=softcap)

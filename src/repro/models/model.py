@@ -80,22 +80,32 @@ def _self_attn(cfg: ModelConfig, p: Dict, x: jax.Array, *, kind: str,
                                    fill_value=jnp.iinfo(jnp.int32).min)
         kp = kp.at[phys, off].set(k.astype(kp.dtype))
         vp = vp.at[phys, off].set(v.astype(vp.dtype))
-        pages_per_slot = page_table.shape[1]
-        lview = pages_per_slot * page_size
-        kv_shape = (b, lview, cfg.num_kv_heads, cfg.head_dim)
-        kc = kp[page_table].reshape(kv_shape)             # slot's logical view
-        vc = vp[page_table].reshape(kv_shape)
         if sq == 1:                                       # decode
-            o = attn_mod.decode_attention(q, kc, vc, pos=positions[:, 0],
-                                          kind=mask_kind,
-                                          window=cfg.sliding_window,
-                                          softcap=cfg.attn_softcap)
+            # hot loop: attend the pools in place (or via the bit-exact
+            # gather fallback) — repro.kernels.ops.paged_decode. The
+            # engine narrows page_table to the live high-water mark, so
+            # every impl scales with context, not pool capacity.
+            from repro.kernels.ops import paged_decode
+            o = paged_decode(q, kp, vp, page_table, positions[:, 0] + 1,
+                             kind=mask_kind, window=cfg.sliding_window,
+                             softcap=cfg.attn_softcap,
+                             impl=cfg.paged_attn_impl)
         else:                                             # chunked prefill
+            # gather only the pages the (narrowed) table reaches — the
+            # engine slices it to the chunk's max position
+            pages_per_slot = page_table.shape[1]
+            lview = pages_per_slot * page_size
+            kv_shape = (b, lview, cfg.num_kv_heads, cfg.head_dim)
+            kc = kp[page_table].reshape(kv_shape)         # slot's logical view
+            vc = vp[page_table].reshape(kv_shape)
             pos_k = jnp.broadcast_to(jnp.arange(lview), (b, lview))
+            # the Pallas flash kernel assumes pos_q = arange(Sq): chunked
+            # prefill runs at an offset, so it drops to the jnp twin
+            impl = "chunked" if cfg.attn_impl == "pallas" else cfg.attn_impl
             o = attn_mod.attention(q, kc, vc, pos_q=positions, pos_k=pos_k,
                                    kind=mask_kind, window=cfg.sliding_window,
                                    softcap=cfg.attn_softcap,
-                                   impl=cfg.attn_impl, chunk=cfg.attn_chunk)
+                                   impl=impl, chunk=cfg.attn_chunk)
         return o.reshape(b, sq, -1) @ p["wo"], {"kp": kp, "vp": vp}
 
     ring = (cfg.local_ring_kv and kind == LOCAL)

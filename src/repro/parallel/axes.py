@@ -119,7 +119,10 @@ def cache_specs(cfg: ModelConfig, cache: Any, mode: str,
     Paged pools (``kp``/``vp``, shape (nb, pages, page, Hkv, hd)) instead
     shard kv-heads over 'model' — pages are the unit of allocator locality,
     so splitting inside a page would defeat the block table; ``fit_spec``
-    falls back to replication when Hkv doesn't divide."""
+    falls back to replication when Hkv doesn't divide. The paged-decode
+    backends compose with this layout: gather/ref partition natively
+    under GSPMD, the Pallas kernel dispatches per-shard via shard_map
+    (grid over local kv-heads; see tests/test_paged_attention.py)."""
     dp = data_axes(mesh)
     long = mode == "long"
     if long and "pod" in mesh.axis_names:

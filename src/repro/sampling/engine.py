@@ -163,6 +163,22 @@ def _decode_chunk_jit(cfg: ModelConfig, rl: RLConfig, params, pool,
     return toks, lps, last, pool                    # toks (K, num_slots)
 
 
+def _live_width(need_pages: int, cap: int) -> int:
+    """Block-table width actually handed to the jitted chunk fns: the
+    live-page high-water mark rounded up to a power of two (so widths
+    bucket into O(log) executables), capped at ``pages_per_slot``.
+
+    Narrowing is *bit-exact*: every page dropped is provably masked in
+    attention (positions >= every slot's length), and masked entries
+    contribute exact zeros to the softmax — so even the default gather
+    impl stops materializing (and the kernel stops iterating) the dead
+    tail of the pool."""
+    w = 1
+    while w < need_pages:
+        w *= 2
+    return min(w, cap)
+
+
 def generate_continuous(cfg: ModelConfig, rl: RLConfig, params,
                         prompts: jax.Array, key: jax.Array, *,
                         max_new: Optional[int] = None,
@@ -231,8 +247,14 @@ def generate_continuous(cfg: ModelConfig, rl: RLConfig, params,
                 chunk = np.concatenate(
                     [chunk, np.full(prefill_chunk - chunk.shape[0], PAD,
                                     np.int32)])
+            # only pages reachable from this chunk's max position — the
+            # gather inside the paged prefill branch scales with c0 + C,
+            # not pool capacity. Padded-tail writes past the narrowed
+            # width hit the same OOB-drop path as past the full width.
+            width = _live_width(pages_for(c0 + prefill_chunk, page_size),
+                                pages_per_slot)
             page_row = jnp.asarray(
-                sched.block_table[pref.slot:pref.slot + 1])
+                sched.block_table[pref.slot:pref.slot + 1, :width])
             logits_c, pool = _prefill_chunk_jit(
                 cfg, params, pool, page_row, jnp.asarray(chunk[None]),
                 jnp.int32(c0), plan=plan)
@@ -252,8 +274,14 @@ def generate_continuous(cfg: ModelConfig, rl: RLConfig, params,
             continue
         # non-decoding slots (empty, or mid-prefill) must scatter their
         # dead PAD writes into the scratch page — NOT position 0 of pages
-        # a prefilling request has already filled.
-        bt = sched.block_table.copy()
+        # a prefilling request has already filled. The table is narrowed
+        # to the live high-water mark over this decode chunk (per-slot
+        # ``lengths`` = the pos vector bound the page loop inside the
+        # kernel; the width bounds every impl's upper shape).
+        width = _live_width(
+            pages_for(int(pos_np[active_np].max()) + sync_every, page_size),
+            pages_per_slot)
+        bt = sched.block_table[:, :width].copy()
         bt[~active_np] = SCRATCH_PAGE
         toks, lps, last, pool = _decode_chunk_jit(
             cfg, rl, params, pool, jnp.asarray(bt), last,

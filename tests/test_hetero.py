@@ -122,6 +122,30 @@ class TestSamplerTelemetry:
         # steady-state rate excludes the compile-laden first call
         assert s.tokens_per_s == s.tokens_generated / s.gen_seconds
 
+    def test_paged_attn_impl_threads_into_cfg(self):
+        """The hetero A/B lever: HeteroConfig.paged_attn_impl (or the
+        explicit arg, which wins) rewrites the sampler's ModelConfig so
+        its engine dispatches the chosen paged-decode backend."""
+        from repro.data import PromptPipeline
+        from repro.hetero.nodes import SamplerNode
+        task = ArithmeticTask(max_operand=9, ops="+", prompt_width=5,
+                              seed=0)
+        tok = Tokenizer()
+        params = init_params(TINY, jax.random.PRNGKey(0))
+
+        def node(hcfg, **kw):
+            return SamplerNode(0, TINY, RL,
+                               PromptPipeline(task, tok, 4, RL.group_size),
+                               task, tok, params, PolicyStore(), hcfg,
+                               seed=0, **kw)
+
+        assert node(HeteroConfig()).cfg.paged_attn_impl == "gather"
+        s = node(HeteroConfig(paged_attn_impl="ref"))
+        assert s.cfg.paged_attn_impl == "ref"
+        s = node(HeteroConfig(paged_attn_impl="ref"),
+                 paged_attn_impl="pallas")
+        assert s.cfg.paged_attn_impl == "pallas"
+
 
 class TestCheckpoint:
     def test_roundtrip(self, rng):

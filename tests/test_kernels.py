@@ -61,6 +61,77 @@ class TestFlashAttention:
                                        rtol=2e-5, atol=2e-5)
 
 
+class TestFlashAttentionModelWiring:
+    """Satellites: ``models/attention.py::attention`` reaches the Pallas
+    kernel behind ``impl='pallas'``, and the kernel's block sizes shrink
+    to fitting divisors instead of asserting on non-multiple shapes."""
+
+    @pytest.mark.parametrize("s", [160, 96, 37])
+    def test_non_divisible_seq_runs(self, rng, s):
+        b, hq, hkv, d = 1, 4, 2, 32
+        ks = jax.random.split(rng, 3)
+        q = jax.random.normal(ks[0], (b, s, hq, d))
+        k = jax.random.normal(ks[1], (b, s, hkv, d))
+        v = jax.random.normal(ks[2], (b, s, hkv, d))
+        out = ops.flash_attention(q, k, v, causal=True, interpret=True)
+        expect = ref.flash_attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=2e-5, atol=2e-5)
+
+    @pytest.mark.parametrize("kind,window", [("causal", 4096),
+                                             ("local", 64), ("bidir", 4096)])
+    def test_attention_dispatch_pallas(self, rng, kind, window):
+        from repro.models.attention import attention
+        b, s, hq, hkv, d = 2, 128, 4, 2, 32
+        ks = jax.random.split(rng, 3)
+        q = jax.random.normal(ks[0], (b, s, hq, d))
+        k = jax.random.normal(ks[1], (b, s, hkv, d))
+        v = jax.random.normal(ks[2], (b, s, hkv, d))
+        pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+        out = attention(q, k, v, pos_q=pos, pos_k=pos, kind=kind,
+                        window=window, impl="pallas", chunk=64)
+        expect = attention(q, k, v, pos_q=pos, pos_k=pos, kind=kind,
+                           window=window, impl="naive")
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_pallas_dispatch_guards_nonstandard_positions(self, rng):
+        """Concrete positions that aren't the arange layout (offsets,
+        PAD_POS sentinels) must fall back to the jnp paths — the flash
+        kernel's offset-derived masks would be silently wrong."""
+        from repro.models.attention import attention
+        b, s, hq, hkv, d = 1, 64, 4, 2, 32
+        ks = jax.random.split(rng, 3)
+        q = jax.random.normal(ks[0], (b, s, hq, d))
+        k = jax.random.normal(ks[1], (b, s, hkv, d))
+        v = jax.random.normal(ks[2], (b, s, hkv, d))
+        pos = jnp.broadcast_to(jnp.arange(s) + 7, (b, s))   # offset layout
+        out = attention(q, k, v, pos_q=pos, pos_k=pos, impl="pallas")
+        expect = attention(q, k, v, pos_q=pos, pos_k=pos, impl="naive")
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+class TestDecodeLengthBound:
+    def test_sliced_equals_full(self, rng):
+        """decode_attention(length=...) must be bit-identical: entries at
+        >= length are provably masked, and masked entries contribute
+        exact zeros to the softmax."""
+        from repro.models.attention import decode_attention
+        b, smax, hq, hkv, d = 3, 64, 4, 2, 16
+        ks = jax.random.split(rng, 3)
+        q = jax.random.normal(ks[0], (b, 1, hq, d))
+        kc = jax.random.normal(ks[1], (b, smax, hkv, d))
+        vc = jax.random.normal(ks[2], (b, smax, hkv, d))
+        pos = jnp.asarray([3, 17, 23])
+        full = decode_attention(q, kc, vc, pos=pos)
+        sliced = decode_attention(q, kc, vc, pos=pos, length=24)
+        np.testing.assert_array_equal(np.asarray(full), np.asarray(sliced))
+        loc = decode_attention(q, kc, vc, pos=pos, kind="local", window=8)
+        loc_b = decode_attention(q, kc, vc, pos=pos, kind="local", window=8,
+                                 length=24)
+        np.testing.assert_array_equal(np.asarray(loc), np.asarray(loc_b))
+
+
 class TestSSDScan:
     @pytest.mark.parametrize("shape", [
         (1, 64, 2, 16, 1, 8), (2, 128, 4, 32, 2, 16), (1, 256, 8, 64, 1, 32),
