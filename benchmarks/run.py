@@ -26,6 +26,7 @@ MODULES = [
     ("table13", "benchmarks.table13_ablation"),
     ("hyperparams", "benchmarks.hyperparams"),
     ("serve", "benchmarks.serve_throughput"),
+    ("serve_lat", "benchmarks.serve_latency"),
     ("logprob", "benchmarks.logprob_bench"),
     ("decode", "benchmarks.decode_bench"),
     ("scaling", "benchmarks.scaling_bench"),
@@ -40,8 +41,11 @@ MODULES = [
 # "sync" asserts the chunked weight transport beats whole-blob sync and
 # stays byte-identical — its mesh part subprocesses when devices < 4;
 # "decode" A/Bs the paged-decode hot loop (gather-legacy vs in-place
-# kernel/ref) on the temp-bytes proxy and emits BENCH_decode.json)
-SMOKE_MODULES = ("fig2", "theory", "logprob", "decode", "scaling", "sync")
+# kernel/ref) on the temp-bytes proxy and emits BENCH_decode.json);
+# "serve_lat" drives the admission-controlled front door under Poisson/
+# bursty/overload open-loop load and emits BENCH_serve.json
+SMOKE_MODULES = ("fig2", "theory", "logprob", "decode", "scaling", "sync",
+                 "serve_lat")
 
 
 def main() -> None:

@@ -278,6 +278,82 @@ class HeteroConfig:
     paged_attn_impl: Optional[str] = None
 
 
+@dataclass(frozen=True)
+class ServeConfig:
+    """Deployment settings for a generation engine and its serving front
+    door — one shared config object instead of the nine loose argparse
+    flags ``launch/serve.py`` used to carry.
+
+    Split of responsibilities: :class:`repro.serving.api.SamplingParams`
+    describes a *request* (temperature/top-k/top-p/token budget);
+    ``ServeConfig`` describes a *deployment* (engine kind, KV capacity,
+    decode horizon, mesh, admission limits). The same object configures
+    batch serving (``launch/serve.py``), the asyncio front door
+    (``repro.serving.server``), and HeteroRL sampler nodes.
+    """
+    # engine ---------------------------------------------------------------
+    engine: str = "continuous"       # static | continuous
+    num_slots: int = 8               # decode slots (continuous engine)
+    page_size: int = 16              # KV page size in tokens
+    prefill_chunk: int = 0           # prompt tokens per chunk (0 = whole)
+    sync_every: int = 8              # decode horizon per scheduler sync
+    # capacity: per-request prompt+completion cap; the page pool defaults
+    # to 1 scratch + num_slots * pages_for(max_total_tokens) pages, and
+    # num_pages overrides it (smaller = real admission pressure, larger =
+    # headroom for the shared-prefix cache to keep pages resident)
+    max_total_tokens: int = 256
+    num_pages: int = 0               # 0 = derive from slots × budget
+    prefix_cache: bool = True        # shared-prefix KV page reuse
+    prefix_cache_entries: int = 64
+    mesh: str = "1x1"                # serve mesh DxM (TrainConfig.mesh conv.)
+    paged_attn_impl: Optional[str] = None   # ModelConfig override (None=keep)
+    # front door -----------------------------------------------------------
+    host: str = "127.0.0.1"
+    port: int = 8100
+    max_queue: int = 256             # admission: queued-request cap
+    # admission: shed load once the KV pages promised to queued requests
+    # exceed this many turns of the page pool (1.0 = the queue may never
+    # hold more demand than the pool serves in one full drain)
+    queue_overcommit: float = 4.0
+    default_priority: int = 1        # priority class for unlabelled requests
+    default_deadline_s: float = 0.0  # TTFT SLO applied when none given (0=off)
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.engine not in ("static", "continuous"):
+            raise ValueError(f"engine={self.engine!r} not static|continuous")
+        if self.num_slots < 1 or self.page_size < 1 or self.sync_every < 1:
+            raise ValueError("num_slots, page_size, sync_every must be >= 1")
+        if self.max_total_tokens < 2:
+            raise ValueError("max_total_tokens must hold a prompt token "
+                             "and a completion token at least")
+        if self.prefill_chunk < 0 or self.num_pages < 0:
+            raise ValueError("prefill_chunk / num_pages must be >= 0")
+        if self.max_queue < 1:
+            raise ValueError("max_queue must be >= 1")
+        if self.queue_overcommit < 1.0:
+            raise ValueError("queue_overcommit < 1 would reject requests "
+                             "an idle pool could serve")
+
+    # derived --------------------------------------------------------------
+    @property
+    def pages_per_slot(self) -> int:
+        return -(-self.max_total_tokens // self.page_size)
+
+    @property
+    def resolved_num_pages(self) -> int:
+        """Page-pool size: explicit ``num_pages``, or scratch + the full
+        budget for every slot — plus 50% headroom when the prefix cache
+        is on, so cached prefixes survive full slot occupancy instead of
+        being evicted the moment every slot reserves its worst-case
+        budget."""
+        if self.num_pages:
+            return self.num_pages
+        base = self.num_slots * self.pages_per_slot
+        headroom = base // 2 if self.prefix_cache else 0
+        return 1 + base + headroom
+
+
 def smoke_variant(cfg: ModelConfig, **overrides) -> ModelConfig:
     """A reduced same-family variant for CPU smoke tests: ≤2 pattern periods
     of layers, d_model ≤ 256, ≤ 4 experts."""

@@ -20,14 +20,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import PolicyStore
-from repro.config import HeteroConfig, ModelConfig, RLConfig, TrainConfig
+from repro.config import (HeteroConfig, ModelConfig, RLConfig, ServeConfig,
+                          TrainConfig)
 from repro.core.diagnostics import MetricsHistory
 from repro.data import PromptPipeline, score_rollouts
 from repro.data.tasks import ArithmeticTask, Tokenizer
 from repro.hetero.events import EventSim, Transport
 from repro.hetero.latency import sync_delay_s
 from repro.parallel import ExecutionPlan, plan_from_flag
-from repro.sampling import generate, token_logps
+from repro.sampling import (ContinuousEngine, build_engine,
+                            rollout_from_results, token_logps)
+from repro.serving.api import Request, SamplingParams
 from repro.training import TrainState, jit_train_step
 from repro.transport import ChunkSubscriber, SimulatedLink, publish_params
 
@@ -57,7 +60,8 @@ class SamplerNode:
                  engine: Optional[str] = None,
                  logprob_impl: str = "fused",
                  paged_attn_impl: Optional[str] = None,
-                 plan: Optional[ExecutionPlan] = None) -> None:
+                 plan: Optional[ExecutionPlan] = None,
+                 serve: Optional[ServeConfig] = None) -> None:
         self.sid = sid
         # sampler-side paged-decode backend (explicit arg beats the
         # HeteroConfig knob beats the arch default) — the A/B lever for
@@ -83,6 +87,14 @@ class SamplerNode:
             bandwidth_mbps=getattr(hcfg, "bandwidth_mbps", float("inf")))
         self.subscriber = ChunkSubscriber(store, self.link)
         self.engine = engine or rl.engine
+        # sampler nodes serve through the same request-level Engine API
+        # as the front door: one engine instance per node, built lazily
+        # at the first batch (its KV budget needs the prompt width) from
+        # a ServeConfig — an explicit one, or a default sized to the
+        # pipeline's rollout shape
+        self.serve_cfg = serve
+        self._gen_engine = None
+        self._engine_tp = -1
         # backend of the App. B.1 recompute — follows the learner's
         # TrainConfig.logprob_impl so A/B runs switch both halves
         self.logprob_impl = logprob_impl
@@ -115,14 +127,45 @@ class SamplerNode:
             return self.warmup_tokens / self.warmup_seconds
         return 0.0
 
+    def _engine_for(self, tp: int, b: int):
+        """The node's engine, built on first use (the paged pool's budget
+        needs the prompt width). Rebuilt only if the rollout shape
+        changes."""
+        if self._gen_engine is None or self._engine_tp != tp:
+            serve = self.serve_cfg or ServeConfig(
+                engine=self.engine,
+                max_total_tokens=tp + self.rl.max_new_tokens,
+                num_slots=min(b, 8))
+            if serve.max_total_tokens < tp + self.rl.max_new_tokens:
+                raise ValueError(
+                    f"ServeConfig.max_total_tokens={serve.max_total_tokens} "
+                    f"< prompt width {tp} + max_new "
+                    f"{self.rl.max_new_tokens}")
+            self._gen_engine = build_engine(
+                self.cfg, self.params, serve, rl=self.rl,
+                vocab_limit=self.tok.vocab_size, plan=self.plan,
+                key=self.key)
+            self._engine_tp = tp
+        return self._gen_engine
+
     def generate_batch(self, now_s: float) -> RolloutBatch:
         req = self.pipeline.next_batch()
-        prompts = jnp.asarray(req.prompts)
+        prompts_np = np.asarray(req.prompts)
+        prompts = jnp.asarray(prompts_np)
+        b, tp = prompts_np.shape
+        engine = self._engine_for(tp, b)
         self.key, k = jax.random.split(self.key)
         t0 = time.perf_counter()
-        roll = generate(self.cfg, self.rl, self.params, prompts, k,
-                        vocab_limit=self.tok.vocab_size, engine=self.engine,
-                        plan=self.plan)
+        # rid = batch row, fresh key per batch: draws are bit-identical to
+        # the legacy generate() path on either engine
+        sp = SamplingParams.from_rl(self.rl)
+        results = engine.generate(
+            [Request(rid=r, prompt=prompts_np[r], params=sp)
+             for r in range(b)], key=k)
+        roll = rollout_from_results(prompts_np, results,
+                                    self.rl.max_new_tokens)
+        if isinstance(engine, ContinuousEngine):
+            roll["stats"] = engine.stats()
         ntok = int(np.asarray(roll["comp_mask"]).sum())
         dt = time.perf_counter() - t0
         if self.batches_generated == 0:         # jit compile folded in
@@ -174,6 +217,7 @@ class SamplerNode:
                 self.plan = plan
                 self.params = self.plan.device_put_params(
                     self.cfg, self.params, copy=True)
+                self._push_params()
             return 0
         # fetch against the *target* plan but commit it to self only
         # after the transport succeeds: if every retry raises, plan and
@@ -196,10 +240,20 @@ class SamplerNode:
             self.plan = target
         if v > self.version or refit:
             self.params = self.plan.device_put_params(self.cfg, host_tree)
+            self._push_params()
             if v > self.version:
                 self.version = v
                 self.syncs += 1
         return stats.bytes_on_wire
+
+    def _push_params(self) -> None:
+        """Keep the node's engine serving the freshly synced weights —
+        the sampler-side half of the weight-sync contract."""
+        if self._gen_engine is not None:
+            self._gen_engine.update_params(self.params)
+            # elastic refit: the engine's jitted steps take the plan as a
+            # static argument, so it must track the node's current plan
+            self._gen_engine.plan = self.plan
 
     def next_delay(self, payload_bytes: int = 0) -> float:
         return sync_delay_s(self.rng, self.hcfg, payload_bytes)

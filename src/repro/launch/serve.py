@@ -1,16 +1,20 @@
-"""Serving driver: batched generation with the KV-cache engine — what a
-HeteroRL *sampler node* runs. CPU-scale by default (smoke config); the
-full-size serving path is exercised shape-exactly by ``dryrun.py``
-(prefill_32k / decode_32k / long_500k).
+"""Serving driver: what a HeteroRL *sampler node* runs. CPU-scale by
+default (smoke config); the full-size serving path is exercised
+shape-exactly by ``dryrun.py`` (prefill_32k / decode_32k / long_500k).
 
-Two engines (``--engine``):
-  static      one lax.scan to --max-new for the whole batch
-  continuous  slot pool + paged KV cache; EOS frees the slot for the
-              next queued prompt (see repro/sampling/scheduler.py)
+All deployment knobs live in one ``ServeConfig`` (engine kind, slots,
+page size, decode horizon, pool size, mesh, admission limits) — the
+flags below map 1:1 onto its fields and the same object drives the
+request-level engine API, the asyncio front door, and HeteroRL sampler
+nodes.
 
-Usage:
+Batch mode (default) runs ``--rounds`` batches through the engine:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b \
       --batch 16 --max-new 24 --engine continuous --slots 8
+
+Front-door mode serves HTTP + websocket with admission control and SLO
+telemetry (POST /generate, GET /ws, /healthz, /metrics):
+  PYTHONPATH=src python -m repro.launch.serve --listen --port 8100
 
 Tensor-parallel serving runs through the same ExecutionPlan as training
 (on CPU export the host-device override first):
@@ -26,12 +30,26 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import RLConfig
+from repro.config import RLConfig, ServeConfig
 from repro.configs import smoke
 from repro.data import ArithmeticTask, Tokenizer, encode_prompts
 from repro.models import encode, init_params
 from repro.parallel import plan_from_flag
-from repro.sampling import generate
+from repro.sampling import build_engine
+from repro.serving.api import Request, SamplingParams
+
+
+def parse_serve_config(args: argparse.Namespace) -> ServeConfig:
+    """The single deployment object the loose flags collapse into."""
+    return ServeConfig(
+        engine=args.engine, num_slots=args.slots, page_size=args.page_size,
+        prefill_chunk=args.prefill_chunk, sync_every=args.sync_every,
+        max_total_tokens=args.max_total_tokens
+        or args.prompt_width + args.max_new,
+        num_pages=args.num_pages, prefix_cache=not args.no_prefix_cache,
+        mesh=args.mesh, paged_attn_impl=args.paged_attn_impl,
+        host=args.host, port=args.port, max_queue=args.max_queue,
+        default_deadline_s=args.deadline_s, seed=args.seed)
 
 
 def main() -> None:
@@ -40,47 +58,55 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--rounds", type=int, default=3)
+    # ServeConfig fields ---------------------------------------------------
     ap.add_argument("--engine", choices=("static", "continuous"),
                     default="static")
-    ap.add_argument("--slots", type=int, default=8,
-                    help="decode slots (continuous engine)")
-    ap.add_argument("--page-size", type=int, default=16,
-                    help="KV page size in tokens (continuous engine)")
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="prompt tokens prefilled per engine iteration "
                          "(0 = whole prompt in one chunk)")
-    ap.add_argument("--sync-every", type=int, default=8,
-                    help="decode horizon: jitted decode steps per "
-                         "scheduler sync (continuous engine)")
+    ap.add_argument("--sync-every", type=int, default=8)
+    ap.add_argument("--max-total-tokens", type=int, default=0,
+                    help="per-request prompt+completion cap "
+                         "(0 = prompt width + --max-new)")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="KV page-pool override (0 = full budget per slot)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable shared-prefix KV page reuse")
     ap.add_argument("--mesh", default="1x1",
                     help="serve mesh DxM (batch over data × tensor "
                          "parallel over model)")
     ap.add_argument("--paged-attn-impl", default=None,
-                    choices=("auto", "pallas", "ref", "gather"),
-                    help="paged-decode backend for the continuous "
-                         "engine (default: the arch's "
-                         "ModelConfig.paged_attn_impl — 'gather', the "
-                         "bit-exact legacy view; 'auto' = in-place "
-                         "Pallas kernel on TPU / jnp ref elsewhere)")
+                    choices=("auto", "pallas", "ref", "gather"))
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8100)
+    ap.add_argument("--max-queue", type=int, default=256)
+    ap.add_argument("--deadline-s", type=float, default=0.0,
+                    help="default TTFT deadline applied to front-door "
+                         "requests (0 = none)")
+    # sampling profile -----------------------------------------------------
     ap.add_argument("--temperature", type=float, default=0.6)
     ap.add_argument("--top-k", type=int, default=20)
     ap.add_argument("--top-p", type=float, default=0.95)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--listen", action="store_true",
+                    help="run the HTTP/websocket front door instead of "
+                         "batch rounds")
     args = ap.parse_args()
+    args.prompt_width = 8            # ArithmeticTask prompt width below
 
     cfg = smoke(args.arch)
-    if args.paged_attn_impl:
-        import dataclasses
-        cfg = dataclasses.replace(cfg, paged_attn_impl=args.paged_attn_impl)
+    serve = parse_serve_config(args)
     rl = RLConfig(temperature=args.temperature, top_k=args.top_k,
                   top_p=args.top_p, max_new_tokens=args.max_new,
-                  engine=args.engine)
+                  engine=serve.engine)
     tok = Tokenizer()
     task = ArithmeticTask(max_operand=99, ops="+-", prompt_width=8,
-                          seed=args.seed)
-    plan = plan_from_flag(args.mesh, "serve")
+                          seed=serve.seed)
+    plan = plan_from_flag(serve.mesh, "serve")
     print(f"[serve] {plan.describe()}")
-    key = jax.random.PRNGKey(args.seed)
+    key = jax.random.PRNGKey(serve.seed)
     params = plan.device_put_params(cfg, init_params(cfg, key))
 
     memory = None
@@ -93,35 +119,47 @@ def main() -> None:
             key, (args.batch, cfg.memory_seq, cfg.d_model)
         ).astype(cfg.dtype)
 
-    gen_kwargs = {}
-    if args.engine == "continuous":
-        gen_kwargs = {"num_slots": args.slots, "page_size": args.page_size,
-                      "sync_every": args.sync_every}
-        if args.prefill_chunk:
-            gen_kwargs["prefill_chunk"] = args.prefill_chunk
+    if args.listen:
+        import asyncio
 
-    total_tok = 0
+        from repro.serving.server import serve_forever
+        if memory is not None:
+            raise SystemExit("--listen serves decoder-only KV-cache "
+                             "architectures (continuous engine)")
+        asyncio.run(serve_forever(cfg, params, serve, rl=rl, tokenizer=tok,
+                                  vocab_limit=tok.vocab_size, plan=plan,
+                                  key=key))
+        return
+
+    engine = build_engine(cfg, params, serve, rl=rl,
+                          vocab_limit=tok.vocab_size, memory=memory,
+                          plan=plan, key=key)
+    sp = SamplingParams.from_rl(rl)
+    total_tok, rid = 0, 0
     t0 = time.time()
     for r in range(args.rounds):
         probs = task.sample_batch(args.batch)
-        prompts = jnp.asarray(encode_prompts(tok, probs))
+        prompts = encode_prompts(tok, probs)
         key, k = jax.random.split(key)
+        reqs = []
+        for row in prompts:
+            reqs.append(Request(rid=rid, prompt=row, params=sp))
+            rid += 1
         t1 = time.time()
-        roll = generate(cfg, rl, params, prompts, k, max_new=args.max_new,
-                        vocab_limit=tok.vocab_size, memory=memory,
-                        plan=plan, **gen_kwargs)
+        results = engine.generate(reqs, key=k)
         dt = time.time() - t1
-        n_tok = int(np.asarray(roll["comp_mask"]).sum())
+        n_tok = sum(res.gen_count for res in results)
         total_tok += n_tok
-        outs = [tok.decode(row) for row in np.asarray(roll["completions"])]
+        outs = [tok.decode(res.tokens) for res in results]
         util = ""
-        if "stats" in roll:
-            util = (f" | slot-util {roll['stats']['slot_utilization']:.2f}"
-                    f" ({roll['stats']['decode_steps']} decode steps)")
+        if hasattr(engine, "stats"):
+            st = engine.stats()
+            util = (f" | slot-util {st['slot_utilization']:.2f}"
+                    f" ({st['decode_steps']} decode steps)")
         print(f"[serve] round {r}: {n_tok} tokens in {dt:.2f}s "
               f"({n_tok/dt:.1f} tok/s){util} | sample: "
               f"{probs[0].prompt.strip()!r} -> {outs[0]!r}")
-    print(f"[serve] arch={cfg.name} engine={args.engine} "
+    print(f"[serve] arch={cfg.name} engine={serve.engine} "
           f"batch={args.batch} total {total_tok} tokens, "
           f"{total_tok/(time.time()-t0):.1f} tok/s incl. compile")
 

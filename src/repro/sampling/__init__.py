@@ -1,10 +1,16 @@
-from repro.sampling.engine import generate, generate_continuous, token_logps
+from repro.sampling.continuous import (ContinuousEngine, generate_continuous,
+                                       rollout_from_results)
+from repro.sampling.engine import (StaticEngine, build_engine, generate,
+                                   token_logps)
 from repro.sampling.paged_cache import (PageAllocator, init_paged_pool,
                                         paged_cache_supported, pages_for)
+from repro.sampling.prefix_cache import PrefixCache
 from repro.sampling.sample import filter_logits, sample_token, sample_token_rows
 from repro.sampling.scheduler import ContinuousScheduler, GenRequest
 
 __all__ = ["generate", "generate_continuous", "token_logps", "filter_logits",
            "sample_token", "sample_token_rows", "PageAllocator",
            "init_paged_pool", "paged_cache_supported", "pages_for",
-           "ContinuousScheduler", "GenRequest"]
+           "ContinuousScheduler", "GenRequest", "ContinuousEngine",
+           "StaticEngine", "build_engine", "rollout_from_results",
+           "PrefixCache"]

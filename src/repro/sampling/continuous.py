@@ -1,0 +1,485 @@
+"""Continuous-batching engine: persistent slot pool over a paged KV cache.
+
+``ContinuousEngine`` is the request-level engine behind both the batch
+``generate_continuous`` wrapper (one call = submit a batch, drain it)
+and the asyncio serving front door (``repro.serving.server``), which
+keeps one engine alive across an open-ended request stream:
+
+- ``submit()`` queues a :class:`repro.serving.api.Request`;
+- ``step()`` runs one scheduler round — admission (priority classes,
+  deadlines, shared-prefix page reuse with copy-on-write), one prefill
+  chunk per prefilling slot, one jitted decode chunk over every slot —
+  and returns the :class:`~repro.serving.api.TokenEvent` stream that
+  round produced;
+- ``generate()`` is the batch convenience: submit, step until drained,
+  return per-request results.
+
+The engine owns the device state (page pools, per-slot logits, RNG
+streams); the scheduler owns the host bookkeeping (block table,
+allocator, prefix cache). Tokens and log-probs are bit-identical to the
+static engine for the same key because RNG folds per request id, never
+per slot — and bit-identical with or without prefix reuse because
+cached pages hold exactly the K/V a cold prefill would write.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, RLConfig
+from repro.data.tasks import EOS, PAD
+from repro.models import decode_step, forward
+from repro.sampling.paged_cache import (PageAllocator, SCRATCH_PAGE,
+                                        init_paged_pool,
+                                        paged_cache_supported, pages_for)
+from repro.sampling.prefix_cache import PrefixCache
+from repro.sampling.sample import mask_vocab, model_logp, sample_token_rows
+from repro.sampling.scheduler import (DECODE, PREFILL, ContinuousScheduler,
+                                      GenRequest)
+from repro.serving.api import (GenerationResult, Request, SamplingParams,
+                               TokenEvent)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "plan"),
+                   donate_argnums=(2,))
+def _prefill_chunk_jit(cfg: ModelConfig, params, pool, page_row, tokens,
+                       start, plan=None):
+    """One chunk of one request's prompt: tokens (1, C) at positions
+    ``start + [0, C)``, K/V scattered into the request's pages. Returns
+    (logits (C, V), pool)."""
+    if plan is not None:
+        params = plan.constrain_params(cfg, params)
+        pool = plan.constrain_cache(cfg, pool)
+    c = tokens.shape[1]
+    positions = start + jnp.arange(c, dtype=jnp.int32)[None, :]
+    logits, pool, _ = forward(cfg, params, tokens, positions=positions,
+                              cache=pool, page_table=page_row)
+    return logits[0], pool
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "plan"),
+                   donate_argnums=(2,))
+def _copy_page_jit(cfg: ModelConfig, plan, pool, src, dst):
+    """Copy physical page ``src`` onto ``dst`` across every layer's K/V
+    pools — the copy-on-write step of shared-prefix admission (the new
+    request appends into its private copy of a cached partial tail
+    page)."""
+    if plan is not None:
+        pool = plan.constrain_cache(cfg, pool)
+
+    def cp(leaf):                       # (nb, pages, page, Hkv, D)
+        return leaf.at[:, dst].set(leaf[:, src])
+
+    return jax.tree_util.tree_map(cp, pool)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "rl", "vocab_limit",
+                                             "sync_every", "plan"),
+                   donate_argnums=(3,))
+def _decode_chunk_jit(cfg: ModelConfig, rl: RLConfig, params, pool,
+                      page_table, last, pos, active, req_keys, gen0,
+                      max_new_v, vocab_limit: int, sync_every: int,
+                      plan=None):
+    """``sync_every`` decode steps over every slot in one executable — the
+    decode horizon that amortizes host dispatch; the scheduler regains
+    control (EOS recycling, admission) only between chunks.
+
+    Slots that finish mid-chunk (EOS / token budget) keep decoding PAD
+    at a position past the block-table width, so their K/V writes hit
+    the OOB-drop path instead of any physical page — with shared-prefix
+    reuse a slot's own first page may be referenced by other requests,
+    so a dead slot must write *nowhere*, not "harmlessly at position 0"
+    as the pre-refcount engine did. Draw ``i`` of slot ``s`` uses
+    fold_in(req_keys[s], gen0[s]+i): the host discards post-EOS draws,
+    and earlier draws are bit-identical to the static engine's.
+    """
+    if plan is not None:
+        params = plan.constrain_params(cfg, params)
+        pool = plan.constrain_cache(cfg, pool)
+    page_size = jax.tree_util.tree_leaves(pool)[0].shape[2]
+    oob_pos = jnp.int32(page_table.shape[1] * page_size)
+
+    def step(carry, i):
+        pool, last, done = carry
+        over = (gen0 + i) >= max_new_v              # token budget exhausted
+        dead = done | over
+        lg = mask_vocab(last, vocab_limit)
+        kt = jax.vmap(jax.random.fold_in)(req_keys, gen0 + i)
+        tok, _, _ = sample_token_rows(kt, lg, temperature=rl.temperature,
+                                      top_k=rl.top_k, top_p=rl.top_p)
+        lp = jnp.where(dead, 0.0, model_logp(last, tok))
+        tok = jnp.where(dead, PAD, tok)
+        step_pos = jnp.where(dead, oob_pos, pos + i)
+        new_last, pool = decode_step(cfg, params, pool, tok, step_pos,
+                                     page_table=page_table)
+        done = done | (tok == EOS)
+        return (pool, new_last, done), (tok, lp)
+
+    (pool, last, _), (toks, lps) = jax.lax.scan(
+        step, (pool, last, ~active), jnp.arange(sync_every))
+    return toks, lps, last, pool                    # toks (K, num_slots)
+
+
+def _live_width(need_pages: int, cap: int) -> int:
+    """Block-table width actually handed to the jitted chunk fns: the
+    live-page high-water mark rounded up to a power of two (so widths
+    bucket into O(log) executables), capped at ``pages_per_slot``.
+
+    Narrowing is *bit-exact*: every page dropped is provably masked in
+    attention (positions >= every slot's length), and masked entries
+    contribute exact zeros to the softmax — so even the default gather
+    impl stops materializing (and the kernel stops iterating) the dead
+    tail of the pool."""
+    w = 1
+    while w < need_pages:
+        w *= 2
+    return min(w, cap)
+
+
+class ContinuousEngine:
+    """Persistent continuous-batching engine over one model + page pool.
+
+    One engine serves one sampling *profile* (temperature/top-k/top-p —
+    the jit-static triple; ``max_new_tokens`` is per-request) and one
+    page-pool capacity. Capacity knobs come from ``ServeConfig`` via
+    ``repro.sampling.build_engine``; this constructor takes them raw.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, rl: RLConfig,
+                 max_total_tokens: int,
+                 num_slots: int = 8,
+                 page_size: int = 16,
+                 sync_every: int = 8,
+                 prefill_chunk: Optional[int] = None,
+                 num_pages: Optional[int] = None,
+                 vocab_limit: Optional[int] = None,
+                 plan=None,
+                 prefix_cache: bool = True,
+                 prefix_cache_entries: int = 64,
+                 key: Optional[jax.Array] = None) -> None:
+        if not paged_cache_supported(cfg):
+            raise ValueError(f"{cfg.name}: continuous engine needs an "
+                             "attention-only decode cache (no enc-dec / "
+                             "ring-KV / modality memory)")
+        self.cfg, self.rl, self.params, self.plan = cfg, rl, params, plan
+        self.vocab_limit = vocab_limit or cfg.padded_vocab
+        self.num_slots = num_slots
+        self.page_size = page_size
+        self.sync_every = sync_every
+        self.prefill_chunk = prefill_chunk
+        self.max_total_tokens = max_total_tokens
+        self.pages_per_slot = pages_for(max_total_tokens, page_size)
+        self.num_pages = num_pages or 1 + num_slots * self.pages_per_slot
+        if self.num_pages < 1 + self.pages_per_slot:
+            raise ValueError(
+                f"num_pages={self.num_pages} cannot hold even one "
+                f"max-size request ({self.pages_per_slot} pages + scratch)")
+        allocator = PageAllocator(self.num_pages)
+        self.prefix_cache = (PrefixCache(page_size, allocator,
+                                         max_entries=prefix_cache_entries)
+                             if prefix_cache else None)
+        self.sched = ContinuousScheduler(num_slots, self.pages_per_slot,
+                                         page_size, allocator,
+                                         prefix_cache=self.prefix_cache)
+        self.pool = init_paged_pool(cfg, self.num_pages, page_size)
+        self.key = key if key is not None else jax.random.PRNGKey(0)
+        self._last = jnp.zeros((num_slots, cfg.padded_vocab), jnp.float32)
+        self._pos = np.zeros((num_slots,), np.int32)
+        self._active = np.zeros((num_slots,), bool)
+        self._gen = np.zeros((num_slots,), np.int32)
+        self._max_new = np.ones((num_slots,), np.int32)
+        self._req_keys = np.zeros((num_slots, 2), np.uint32)  # threefry data
+        self._results: Dict[int, GenerationResult] = {}
+
+    # ------------------------------------------------------------------
+    @property
+    def profile(self) -> tuple:
+        return (self.rl.temperature, self.rl.top_k, self.rl.top_p)
+
+    @property
+    def free_pages(self) -> int:
+        return self.sched.allocator.available
+
+    @property
+    def evictable_pages(self) -> int:
+        """Pages a prefix-cache flush could return to the free list."""
+        if self.prefix_cache is None:
+            return 0
+        alloc = self.sched.allocator
+        return sum(1 for ent in self.prefix_cache._entries.values()
+                   for pg in ent.pages if alloc.refcount(pg) == 1)
+
+    def has_work(self) -> bool:
+        return (self.sched.queue_depth > 0
+                or any(r is not None for r in self.sched.slots))
+
+    def update_params(self, params: Any) -> None:
+        self.params = params
+
+    def stats(self) -> Dict[str, float]:
+        out: Dict[str, float] = dict(self.sched.stats)
+        out["slot_utilization"] = self.sched.slot_utilization()
+        out["free_pages"] = self.free_pages
+        if self.prefix_cache is not None:
+            for k, v in self.prefix_cache.stats.items():
+                out[f"prefix_cache_{k}"] = v
+        return out
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        """Queue a request. Raises on profile mismatch (one sampling
+        profile per engine — spin up another engine for another
+        profile) and on prompts that can never fit the page budget."""
+        if req.params.profile != self.profile:
+            raise ValueError(
+                f"request {req.rid}: sampling profile {req.params.profile} "
+                f"!= engine profile {self.profile} — one profile per "
+                "engine (max_new_tokens may vary per request)")
+        total = req.prompt_len + req.params.max_new_tokens
+        if pages_for(total, self.page_size) > self.pages_per_slot:
+            raise ValueError(
+                f"request {req.rid}: {total} tokens exceed the engine's "
+                f"max_total_tokens={self.max_total_tokens}")
+        self.sched.submit(GenRequest(
+            rid=req.rid, prompt=req.prompt,
+            max_new=req.params.max_new_tokens, priority=req.priority,
+            deadline_s=req.deadline_s, arrival_s=req.arrival_s))
+
+    def _finish_result(self, r: GenRequest) -> GenerationResult:
+        res = GenerationResult(
+            rid=r.rid, tokens=np.asarray(r.tokens, np.int32),
+            logps=np.asarray(r.logps, np.float32),
+            finish_reason=r.finish_reason, prompt_len=r.prompt_len,
+            prefix_hit_tokens=r.prefix_hit_tokens,
+            ttft_s=(r.t_first_token - r.arrival_s
+                    if r.t_first_token >= 0 else float("nan")),
+            latency_s=r.t_done - r.arrival_s)
+        self._results[r.rid] = res
+        return res
+
+    def pop_result(self, rid: int) -> Optional[GenerationResult]:
+        return self._results.pop(rid, None)
+
+    # ------------------------------------------------------------------
+    def step(self, now_s: Optional[float] = None) -> List[TokenEvent]:
+        """One scheduler round: admit → one prefill chunk per prefilling
+        slot → one decode chunk. Returns this round's token events
+        (streaming order: per request, in-completion order)."""
+        now = time.perf_counter() if now_s is None else now_s
+        events: List[TokenEvent] = []
+        sched = self.sched
+        newly = sched.admit(now)
+        for r in sched.drain_expired():
+            self._finish_result(r)
+            events.append(TokenEvent(rid=r.rid, token=-1, logp=0.0, index=0,
+                                     finished=True, finish_reason="expired"))
+        for r in newly:
+            if r.cow_src >= 0:
+                self.pool = _copy_page_jit(self.cfg, self.plan, self.pool,
+                                           jnp.int32(r.cow_src),
+                                           jnp.int32(r.cow_dst))
+                sched.stats["cow_copies"] += 1
+        if not newly and sched.queue_depth > 0 \
+                and all(r is None for r in sched.slots):
+            raise RuntimeError(
+                "admission stalled with an empty slot pool: the page pool "
+                f"({self.num_pages} pages) cannot fit the head request "
+                "even after prefix-cache eviction")
+
+        # chunked prefill: every prefilling slot advances one chunk per
+        # step, interleaved with the decode chunk below
+        for pref in [r for r in sched.slots
+                     if r is not None and r.state == PREFILL]:
+            c0 = pref.prefill_pos
+            remaining = pref.prompt_len - c0
+            cw = min(self.prefill_chunk or remaining, remaining) \
+                if self.prefill_chunk else remaining
+            chunk = pref.prompt[c0:c0 + cw]
+            if chunk.shape[0] < cw:                 # pad to fixed shape
+                chunk = np.concatenate(
+                    [chunk, np.full(cw - chunk.shape[0], PAD, np.int32)])
+            # only pages reachable from this chunk's max position — the
+            # gather inside the paged prefill branch scales with c0 + C,
+            # not pool capacity. Padded-tail writes past the narrowed
+            # width hit the same OOB-drop path as past the full width.
+            width = _live_width(pages_for(c0 + cw, self.page_size),
+                                self.pages_per_slot)
+            page_row = jnp.asarray(
+                sched.block_table[pref.slot:pref.slot + 1, :width])
+            logits_c, self.pool = _prefill_chunk_jit(
+                self.cfg, self.params, self.pool, page_row,
+                jnp.asarray(chunk[None]), jnp.int32(c0), plan=self.plan)
+            sched.stats["prefill_chunks"] += 1
+            pref.prefill_pos = min(pref.prompt_len, c0 + cw)
+            sched.stats["prefill_tokens"] += pref.prefill_pos - c0
+            if pref.prefill_pos >= pref.prompt_len:  # prompt fully cached
+                s = pref.slot
+                self._last = self._last.at[s].set(
+                    logits_c[pref.prompt_len - 1 - c0])
+                pref.state = DECODE
+                self._active[s], self._pos[s] = True, pref.prompt_len
+                self._gen[s], self._max_new[s] = 0, pref.max_new
+                self._req_keys[s] = np.asarray(
+                    jax.random.fold_in(self.key, pref.rid), np.uint32)
+                if self.prefix_cache is not None:
+                    self.prefix_cache.insert(
+                        pref.prompt,
+                        pref.pages[:pages_for(pref.prompt_len,
+                                              self.page_size)])
+
+        dec = sched.decoding()
+        if not dec:
+            return events
+        # non-decoding slots (empty, or mid-prefill) must scatter their
+        # dead PAD writes into the scratch page — NOT position 0 of pages
+        # a prefilling request has already filled. The table is narrowed
+        # to the live high-water mark over this decode chunk (per-slot
+        # ``lengths`` = the pos vector bound the page loop inside the
+        # kernel; the width bounds every impl's upper shape).
+        width = _live_width(
+            pages_for(int(self._pos[self._active].max()) + self.sync_every,
+                      self.page_size),
+            self.pages_per_slot)
+        bt = sched.block_table[:, :width].copy()
+        bt[~self._active] = SCRATCH_PAGE
+        toks, lps, self._last, self.pool = _decode_chunk_jit(
+            self.cfg, self.rl, self.params, self.pool, jnp.asarray(bt),
+            self._last, jnp.asarray(self._pos), jnp.asarray(self._active),
+            jnp.asarray(self._req_keys), jnp.asarray(self._gen),
+            jnp.asarray(self._max_new), self.vocab_limit, self.sync_every,
+            plan=self.plan)
+        sched.stats["decode_steps"] += self.sync_every
+        tok_np, lp_np = np.asarray(toks), np.asarray(lps)
+        for r in dec:
+            for i in range(self.sync_every):
+                if r.gen_count >= r.max_new:
+                    break
+                t = int(tok_np[i, r.slot])
+                r.tokens.append(t)
+                r.logps.append(float(lp_np[i, r.slot]))
+                sched.stats["decode_slot_steps"] += 1
+                if r.gen_count == 1:
+                    r.t_first_token = now
+                events.append(TokenEvent(rid=r.rid, token=t,
+                                         logp=r.logps[-1],
+                                         index=r.gen_count - 1))
+                if t == EOS:
+                    break
+            self._pos[r.slot] = r.next_pos
+            self._gen[r.slot] = r.gen_count
+            reason = ""
+            if r.tokens and r.tokens[-1] == EOS:
+                reason = "eos"
+            elif r.gen_count >= r.max_new:
+                reason = "length"
+            if reason:
+                self._active[r.slot] = False
+                sched.finish(r, reason, now)
+                self._finish_result(r)
+                events.append(TokenEvent(rid=r.rid, token=-1, logp=0.0,
+                                         index=r.gen_count, finished=True,
+                                         finish_reason=reason))
+        return events
+
+    # ------------------------------------------------------------------
+    def generate(self, requests: Sequence[Request],
+                 key: Optional[jax.Array] = None) -> List[GenerationResult]:
+        """Batch convenience: submit ``requests``, step until they all
+        finish, return results in request order."""
+        if key is not None:
+            self.key = key
+        pending = set()
+        for req in requests:
+            self.submit(req)
+            pending.add(req.rid)
+        while pending - self._results.keys():
+            if not self.has_work():
+                missing = sorted(pending - self._results.keys())
+                raise RuntimeError(f"engine drained but requests {missing} "
+                                   "never finished")
+            self.step()
+        return [self._results.pop(r.rid) for r in requests]
+
+
+# --------------------------------------------------------------------------
+# batch wrapper (the pre-request-API surface, kept exactly compatible)
+
+
+def rollout_from_results(prompts: np.ndarray,
+                         results: Sequence[GenerationResult],
+                         max_new: int) -> Dict[str, Any]:
+    """Assemble the engine-agnostic rollout dict (tokens / completions /
+    sampler_lp / comp_mask) from per-request results. Row ``i`` is
+    ``results[i]``; expired requests contribute all-PAD rows."""
+    b, tp = prompts.shape
+    completions = np.full((b, max_new), PAD, np.int32)
+    sampler_lp = np.zeros((b, max_new), np.float32)
+    comp_mask = np.zeros((b, max_new), np.float32)
+    for i, res in enumerate(results):
+        n = res.gen_count
+        completions[i, :n] = res.tokens
+        sampler_lp[i, :n] = res.logps
+        comp_mask[i, :n] = 1.0
+    tokens = np.concatenate([np.asarray(prompts), completions], axis=1)
+    return {"tokens": jnp.asarray(tokens),
+            "completions": jnp.asarray(completions),
+            "sampler_lp": jnp.asarray(sampler_lp),
+            "comp_mask": jnp.asarray(comp_mask),
+            "prompt_len": tp}
+
+
+def generate_continuous(cfg: ModelConfig, rl: RLConfig, params,
+                        prompts: jax.Array, key: jax.Array, *,
+                        max_new: Optional[int] = None,
+                        vocab_limit: Optional[int] = None,
+                        num_slots: Optional[int] = None,
+                        page_size: int = 16,
+                        prefill_chunk: Optional[int] = None,
+                        prompt_lens: Optional[Sequence[int]] = None,
+                        sync_every: int = 8,
+                        plan=None,
+                        prefix_cache: bool = False,
+                        ) -> Dict[str, jax.Array]:
+    """Continuous-batching generation over ``prompts`` (B, Tp).
+
+    Drop-in for the static path: same rollout dict, same tokens/logps for
+    the same ``key`` (per-request RNG streams). Extras: ``num_slots``
+    decode slots are recycled as requests finish, ``prompt_lens`` admits
+    per-request true prompt lengths (rows shorter than Tp),
+    ``prefill_chunk`` bounds how much prompt is prefilled between decode
+    chunks (defaults to the whole prompt in one chunk), ``sync_every``
+    is the decode horizon, and ``prefix_cache`` turns on shared-prefix
+    page reuse (bit-exact; off by default here so the legacy batch path
+    keeps its exact page accounting — the serving front door defaults it
+    on). ``plan`` (an ``ExecutionPlan``) makes prefill/decode run
+    tensor-parallel: params and the paged KV pool are constrained by the
+    plan's cache_specs.
+    """
+    max_new = max_new or rl.max_new_tokens
+    prompts_np = np.asarray(prompts)
+    b, tp = prompts_np.shape
+    num_slots = min(b, num_slots or 8)
+    engine = ContinuousEngine(
+        cfg, params, rl=rl, max_total_tokens=tp + max_new,
+        num_slots=num_slots, page_size=page_size, sync_every=sync_every,
+        prefill_chunk=min(tp, prefill_chunk) if prefill_chunk else None,
+        vocab_limit=vocab_limit, plan=plan, prefix_cache=prefix_cache,
+        key=key)
+    sp = SamplingParams(temperature=rl.temperature, top_k=rl.top_k,
+                        top_p=rl.top_p, max_new_tokens=max_new)
+    requests = []
+    for r in range(b):
+        plen = int(prompt_lens[r]) if prompt_lens is not None else tp
+        if not 0 < plen <= tp:
+            raise ValueError(f"prompt_lens[{r}]={plen} outside (0, {tp}]")
+        requests.append(Request(rid=r, prompt=prompts_np[r, :plen],
+                                params=sp))
+    results = engine.generate(requests)
+    roll = rollout_from_results(prompts_np, results, max_new)
+    roll["stats"] = engine.stats()
+    return roll

@@ -1,17 +1,26 @@
 """Generation engines (the sampler node's workhorse).
 
-Two engines share one contract (a rollout dict with tokens, completions,
-engine-side log-probs and a completion mask):
+Two engines share one request-level contract
+(:class:`repro.serving.api.Engine`):
 
-- **static** — prefill + one jitted ``lax.scan`` decode loop over the
-  whole batch. Every sequence runs the full ``max_new`` steps even after
-  EOS (finished rows decode PAD into dead cache slots).
-- **continuous** — a fixed pool of decode slots over a paged
-  (block-table) KV cache with a request queue: finished sequences free
-  their slot and pages immediately, and chunked prefill for the next
-  queued prompt interleaves with the jitted decode step. Same tokens and
-  log-probs as the static engine for identical seeds (RNG is folded per
-  request, never per batch position), but no wasted decode steps.
+- **static** (:class:`StaticEngine`) — prefill + one jitted ``lax.scan``
+  decode loop over the whole batch. Every sequence runs the full
+  ``max_new`` steps even after EOS (finished rows decode PAD into dead
+  cache slots).
+- **continuous** (:class:`repro.sampling.continuous.ContinuousEngine`) —
+  a fixed pool of decode slots over a paged (block-table) KV cache with
+  a priority request queue: finished sequences free their slot and pages
+  immediately, chunked prefill for the next queued prompt interleaves
+  with the jitted decode step, and shared prompt prefixes reuse KV pages
+  across requests. Same tokens and log-probs as the static engine for
+  identical seeds (RNG is folded per request id, never per batch
+  position), but no wasted decode steps.
+
+``build_engine`` constructs either from a ``ServeConfig`` deployment
+description. The module-level ``generate(cfg, rl, params, prompts, ...)``
+is the legacy batch entry point, kept as a thin shim over the engines —
+new code should build an engine once and feed it
+:class:`~repro.serving.api.Request` objects (see README "Serving").
 
 Per App. B.1 the engine-side log-probs are *metadata*: the learner
 recomputes them with its own forward pass by default
@@ -20,39 +29,25 @@ the vLLM/FSDP log-prob mismatch.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
+import time
 import warnings
-from typing import Dict, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import ModelConfig, RLConfig
+from repro.config import ModelConfig, RLConfig, ServeConfig
 from repro.data.tasks import EOS, PAD
 from repro.models import decode_step, forward, init_cache
 from repro.parallel import plan_for_params
-from repro.sampling.paged_cache import (PageAllocator, SCRATCH_PAGE,
-                                        init_paged_pool,
-                                        paged_cache_supported, pages_for)
-from repro.sampling.sample import sample_token_rows
-from repro.sampling.scheduler import (DECODE, PREFILL, ContinuousScheduler,
-                                      GenRequest)
-
-
-def _mask_vocab(lg: jax.Array, vocab_limit: int) -> jax.Array:
-    if vocab_limit < lg.shape[-1]:
-        bad = jnp.arange(lg.shape[-1]) >= vocab_limit
-        lg = jnp.where(bad, -1e30, lg)
-    return lg
-
-
-def _model_logp(last: jax.Array, tok: jax.Array) -> jax.Array:
-    """Full-model logp of the drawn token (what the learner's
-    teacher-forced recompute sees — vLLM convention)."""
-    full_lp = jax.nn.log_softmax(last.astype(jnp.float32), axis=-1)
-    return jnp.take_along_axis(full_lp, tok[:, None], axis=-1)[:, 0]
-
+from repro.sampling.continuous import (ContinuousEngine, generate_continuous,
+                                       rollout_from_results)
+from repro.sampling.paged_cache import paged_cache_supported
+from repro.sampling.sample import mask_vocab, model_logp, sample_token_rows
+from repro.serving.api import GenerationResult, Request, SamplingParams
 
 # --------------------------------------------------------------------------
 # static engine: one lax.scan to max_new
@@ -62,7 +57,8 @@ def _model_logp(last: jax.Array, tok: jax.Array) -> jax.Array:
                                              "vocab_limit", "plan"))
 def _generate_jit(cfg: ModelConfig, rl: RLConfig, params, prompts, key,
                   max_new: int, vocab_limit: int,
-                  memory: Optional[jax.Array] = None, plan=None):
+                  memory: Optional[jax.Array] = None, plan=None,
+                  rids: Optional[jax.Array] = None):
     b, tp = prompts.shape
     if plan is not None:        # tensor-parallel serve: the ExecutionPlan
         params = plan.constrain_params(cfg, params)
@@ -72,19 +68,22 @@ def _generate_jit(cfg: ModelConfig, rl: RLConfig, params, prompts, key,
     logits, cache, _ = forward(cfg, params, prompts, cache=cache,
                                memory=memory)
     last = logits[:, -1]
-    # one RNG stream per request row: draw t uses fold_in(fold_in(key, r), t)
+    # one RNG stream per request id: draw t uses fold_in(fold_in(key, rid), t)
     # — identical draws no matter which engine/slot serves the request.
-    row_keys = jax.vmap(lambda r: jax.random.fold_in(key, r))(jnp.arange(b))
+    # rid defaults to the batch row (the legacy batch entry point).
+    if rids is None:
+        rids = jnp.arange(b)
+    row_keys = jax.vmap(lambda r: jax.random.fold_in(key, r))(rids)
 
     def step(carry, t):
         cache, last, done, pos = carry
-        lg = _mask_vocab(last, vocab_limit)
+        lg = mask_vocab(last, vocab_limit)
         kt = jax.vmap(jax.random.fold_in)(row_keys, jnp.full((b,), t))
         tok, _, _ = sample_token_rows(kt, lg, temperature=rl.temperature,
                                       top_k=rl.top_k, top_p=rl.top_p)
         tok = jnp.where(done, PAD, tok)
         valid = ~done
-        lp_model = jnp.where(done, 0.0, _model_logp(last, tok))
+        lp_model = jnp.where(done, 0.0, model_logp(last, tok))
         new_logits, cache = decode_step(cfg, params, cache, tok, pos,
                                         memory=memory)
         done = done | (tok == EOS)
@@ -99,236 +98,115 @@ def _generate_jit(cfg: ModelConfig, rl: RLConfig, params, prompts, key,
     return completions, sampler_lp, comp_mask
 
 
-# --------------------------------------------------------------------------
-# continuous-batching engine: slot pool + paged KV cache
+class StaticEngine:
+    """Request-level wrapper over the one-scan static path.
 
-
-@functools.partial(jax.jit, static_argnames=("cfg", "plan"),
-                   donate_argnums=(2,))
-def _prefill_chunk_jit(cfg: ModelConfig, params, pool, page_row, tokens,
-                       start, plan=None):
-    """One chunk of one request's prompt: tokens (1, C) at positions
-    ``start + [0, C)``, K/V scattered into the request's pages. Returns
-    (logits (C, V), pool)."""
-    if plan is not None:
-        params = plan.constrain_params(cfg, params)
-        pool = plan.constrain_cache(cfg, pool)
-    c = tokens.shape[1]
-    positions = start + jnp.arange(c, dtype=jnp.int32)[None, :]
-    logits, pool, _ = forward(cfg, params, tokens, positions=positions,
-                              cache=pool, page_table=page_row)
-    return logits[0], pool
-
-
-@functools.partial(jax.jit, static_argnames=("cfg", "rl", "vocab_limit",
-                                             "sync_every", "plan"),
-                   donate_argnums=(3,))
-def _decode_chunk_jit(cfg: ModelConfig, rl: RLConfig, params, pool,
-                      page_table, last, pos, active, req_keys, gen0,
-                      max_new_v, vocab_limit: int, sync_every: int,
-                      plan=None):
-    """``sync_every`` decode steps over every slot in one executable — the
-    decode horizon that amortizes host dispatch; the scheduler regains
-    control (EOS recycling, admission) only between chunks.
-
-    Slots that finish mid-chunk (EOS / token budget) keep decoding PAD at
-    position 0 — within their own first page, or the scratch page for
-    empty slots — so the batch shape stays fixed and no live KV is ever
-    touched. Draw ``i`` of slot ``s`` uses fold_in(req_keys[s], gen0[s]+i):
-    the host discards post-EOS draws, and earlier draws are bit-identical
-    to the static engine's.
+    The scan is rectangular, so a batch must share one prompt length
+    (use the continuous engine for ragged/streaming workloads);
+    ``max_new_tokens`` may vary per request — the scan runs to the batch
+    max and each request is trimmed host-side, which is exact because
+    draw ``t`` of request ``rid`` never depends on the scan length.
     """
-    if plan is not None:
-        params = plan.constrain_params(cfg, params)
-        pool = plan.constrain_cache(cfg, pool)
 
-    def step(carry, i):
-        pool, last, done = carry
-        over = (gen0 + i) >= max_new_v              # token budget exhausted
-        dead = done | over
-        lg = _mask_vocab(last, vocab_limit)
-        kt = jax.vmap(jax.random.fold_in)(req_keys, gen0 + i)
-        tok, _, _ = sample_token_rows(kt, lg, temperature=rl.temperature,
-                                      top_k=rl.top_k, top_p=rl.top_p)
-        lp = jnp.where(dead, 0.0, _model_logp(last, tok))
-        tok = jnp.where(dead, PAD, tok)
-        step_pos = jnp.where(dead, 0, pos + i)
-        new_last, pool = decode_step(cfg, params, pool, tok, step_pos,
-                                     page_table=page_table)
-        done = done | (tok == EOS)
-        return (pool, new_last, done), (tok, lp)
+    def __init__(self, cfg: ModelConfig, params, *, rl: RLConfig,
+                 vocab_limit: Optional[int] = None,
+                 memory: Optional[jax.Array] = None,
+                 plan=None,
+                 key: Optional[jax.Array] = None) -> None:
+        self.cfg, self.rl, self.params = cfg, rl, params
+        self.vocab_limit = vocab_limit or cfg.padded_vocab
+        self.memory, self.plan = memory, plan
+        self.key = key if key is not None else jax.random.PRNGKey(0)
 
-    (pool, last, _), (toks, lps) = jax.lax.scan(
-        step, (pool, last, ~active), jnp.arange(sync_every))
-    return toks, lps, last, pool                    # toks (K, num_slots)
+    @property
+    def profile(self) -> tuple:
+        return (self.rl.temperature, self.rl.top_k, self.rl.top_p)
 
+    def update_params(self, params: Any) -> None:
+        self.params = params
 
-def _live_width(need_pages: int, cap: int) -> int:
-    """Block-table width actually handed to the jitted chunk fns: the
-    live-page high-water mark rounded up to a power of two (so widths
-    bucket into O(log) executables), capped at ``pages_per_slot``.
-
-    Narrowing is *bit-exact*: every page dropped is provably masked in
-    attention (positions >= every slot's length), and masked entries
-    contribute exact zeros to the softmax — so even the default gather
-    impl stops materializing (and the kernel stops iterating) the dead
-    tail of the pool."""
-    w = 1
-    while w < need_pages:
-        w *= 2
-    return min(w, cap)
-
-
-def generate_continuous(cfg: ModelConfig, rl: RLConfig, params,
-                        prompts: jax.Array, key: jax.Array, *,
-                        max_new: Optional[int] = None,
-                        vocab_limit: Optional[int] = None,
-                        num_slots: Optional[int] = None,
-                        page_size: int = 16,
-                        prefill_chunk: Optional[int] = None,
-                        prompt_lens: Optional[Sequence[int]] = None,
-                        sync_every: int = 8,
-                        plan=None,
-                        ) -> Dict[str, jax.Array]:
-    """Continuous-batching generation over ``prompts`` (B, Tp).
-
-    Drop-in for the static path: same rollout dict, same tokens/logps for
-    the same ``key`` (per-request RNG streams). Extras: ``num_slots``
-    decode slots are recycled as requests finish, ``prompt_lens`` admits
-    per-request true prompt lengths (rows shorter than Tp),
-    ``prefill_chunk`` bounds how much prompt is prefilled between decode
-    chunks (defaults to the whole prompt in one chunk), and ``sync_every``
-    is the decode horizon: jitted decode steps per scheduler sync (larger
-    amortizes dispatch, smaller recycles slots sooner). ``plan`` (an
-    ``ExecutionPlan``) makes prefill/decode run tensor-parallel: params
-    and the paged KV pool are constrained by the plan's cache_specs.
-    """
-    if not paged_cache_supported(cfg):
-        raise ValueError(f"{cfg.name}: continuous engine needs an "
-                         "attention-only decode cache (no enc-dec / "
-                         "ring-KV / modality memory)")
-    max_new = max_new or rl.max_new_tokens
-    vocab_limit = vocab_limit or cfg.padded_vocab
-    prompts_np = np.asarray(prompts)
-    b, tp = prompts_np.shape
-    num_slots = min(b, num_slots or 8)
-    prefill_chunk = min(tp, prefill_chunk or tp)
-
-    pages_per_slot = pages_for(tp + max_new, page_size)
-    num_pages = 1 + num_slots * pages_per_slot       # + scratch page 0
-    pool = init_paged_pool(cfg, num_pages, page_size)
-    sched = ContinuousScheduler(num_slots, pages_per_slot, page_size,
-                                PageAllocator(num_pages))
-    for r in range(b):
-        plen = int(prompt_lens[r]) if prompt_lens is not None else tp
-        if not 0 < plen <= tp:
-            raise ValueError(f"prompt_lens[{r}]={plen} outside (0, {tp}]")
-        sched.submit(GenRequest(rid=r,
-                                prompt=prompts_np[r, :plen].astype(np.int32),
-                                max_new=max_new))
-
-    last = jnp.zeros((num_slots, cfg.padded_vocab), jnp.float32)
-    pos_np = np.zeros((num_slots,), np.int32)
-    active_np = np.zeros((num_slots,), bool)
-    gen_np = np.zeros((num_slots,), np.int32)
-    max_new_np = np.full((num_slots,), max_new, np.int32)
-    req_keys_np = np.zeros((num_slots, 2), np.uint32)   # threefry key data
-
-    while not sched.all_done:
-        sched.admit()
-
-        # chunked prefill: every prefilling slot advances one chunk per
-        # iteration, interleaved with the decode chunks below
-        for pref in [r for r in sched.slots
-                     if r is not None and r.state == PREFILL]:
-            c0 = pref.prefill_pos
-            chunk = pref.prompt[c0:c0 + prefill_chunk]
-            if chunk.shape[0] < prefill_chunk:          # pad to fixed shape
-                chunk = np.concatenate(
-                    [chunk, np.full(prefill_chunk - chunk.shape[0], PAD,
-                                    np.int32)])
-            # only pages reachable from this chunk's max position — the
-            # gather inside the paged prefill branch scales with c0 + C,
-            # not pool capacity. Padded-tail writes past the narrowed
-            # width hit the same OOB-drop path as past the full width.
-            width = _live_width(pages_for(c0 + prefill_chunk, page_size),
-                                pages_per_slot)
-            page_row = jnp.asarray(
-                sched.block_table[pref.slot:pref.slot + 1, :width])
-            logits_c, pool = _prefill_chunk_jit(
-                cfg, params, pool, page_row, jnp.asarray(chunk[None]),
-                jnp.int32(c0), plan=plan)
-            sched.stats["prefill_chunks"] += 1
-            pref.prefill_pos = min(pref.prompt_len, c0 + prefill_chunk)
-            if pref.prefill_pos >= pref.prompt_len:     # prompt fully cached
-                s = pref.slot
-                last = last.at[s].set(logits_c[pref.prompt_len - 1 - c0])
-                pref.state = DECODE
-                active_np[s], pos_np[s], gen_np[s] = True, pref.prompt_len, 0
-                max_new_np[s] = pref.max_new
-                req_keys_np[s] = np.asarray(
-                    jax.random.fold_in(key, pref.rid), np.uint32)
-
-        dec = sched.decoding()
-        if not dec:
-            continue
-        # non-decoding slots (empty, or mid-prefill) must scatter their
-        # dead PAD writes into the scratch page — NOT position 0 of pages
-        # a prefilling request has already filled. The table is narrowed
-        # to the live high-water mark over this decode chunk (per-slot
-        # ``lengths`` = the pos vector bound the page loop inside the
-        # kernel; the width bounds every impl's upper shape).
-        width = _live_width(
-            pages_for(int(pos_np[active_np].max()) + sync_every, page_size),
-            pages_per_slot)
-        bt = sched.block_table[:, :width].copy()
-        bt[~active_np] = SCRATCH_PAGE
-        toks, lps, last, pool = _decode_chunk_jit(
-            cfg, rl, params, pool, jnp.asarray(bt), last,
-            jnp.asarray(pos_np), jnp.asarray(active_np),
-            jnp.asarray(req_keys_np), jnp.asarray(gen_np),
-            jnp.asarray(max_new_np), vocab_limit, sync_every, plan=plan)
-        sched.stats["decode_steps"] += sync_every
-        tok_np, lp_np = np.asarray(toks), np.asarray(lps)
-        for r in dec:
-            for i in range(sync_every):
-                if r.gen_count >= r.max_new:
-                    break
-                t = int(tok_np[i, r.slot])
-                r.tokens.append(t)
-                r.logps.append(float(lp_np[i, r.slot]))
-                sched.stats["decode_slot_steps"] += 1
-                if t == EOS:
-                    break
-            pos_np[r.slot] = r.next_pos
-            gen_np[r.slot] = r.gen_count
-            if r.tokens and r.tokens[-1] == EOS:
-                active_np[r.slot] = False
-                sched.finish(r, "eos")
-            elif r.gen_count >= r.max_new:
-                active_np[r.slot] = False
-                sched.finish(r, "length")
-
-    completions = np.full((b, max_new), PAD, np.int32)
-    sampler_lp = np.zeros((b, max_new), np.float32)
-    comp_mask = np.zeros((b, max_new), np.float32)
-    for req in sched.finished:
-        n = req.gen_count
-        completions[req.rid, :n] = req.tokens
-        sampler_lp[req.rid, :n] = req.logps
-        comp_mask[req.rid, :n] = 1.0
-    tokens = np.concatenate([prompts_np, completions], axis=1)
-    return {"tokens": jnp.asarray(tokens),
-            "completions": jnp.asarray(completions),
-            "sampler_lp": jnp.asarray(sampler_lp),
-            "comp_mask": jnp.asarray(comp_mask),
-            "prompt_len": tp,
-            "stats": dict(sched.stats,
-                          slot_utilization=sched.slot_utilization())}
+    def generate(self, requests: Sequence[Request],
+                 key: Optional[jax.Array] = None) -> List[GenerationResult]:
+        if key is not None:
+            self.key = key
+        for req in requests:
+            if req.params.profile != self.profile:
+                raise ValueError(
+                    f"request {req.rid}: sampling profile "
+                    f"{req.params.profile} != engine profile {self.profile}")
+        plens = {r.prompt_len for r in requests}
+        if len(plens) > 1:
+            raise ValueError(
+                "static engine scans a rectangular batch: got prompt "
+                f"lengths {sorted(plens)} — pad, or use the continuous "
+                "engine for ragged prompts")
+        t0 = time.perf_counter()
+        prompts = jnp.asarray(np.stack([r.prompt for r in requests]))
+        rids = jnp.asarray([r.rid for r in requests], jnp.int32)
+        max_new = max(r.params.max_new_tokens for r in requests)
+        completions, sampler_lp, comp_mask = _generate_jit(
+            self.cfg, self.rl, self.params, prompts, self.key, max_new,
+            self.vocab_limit, self.memory, plan=self.plan, rids=rids)
+        elapsed = time.perf_counter() - t0
+        comp_np = np.asarray(completions)
+        lp_np = np.asarray(sampler_lp)
+        mask_np = np.asarray(comp_mask)
+        out: List[GenerationResult] = []
+        for i, req in enumerate(requests):
+            budget = req.params.max_new_tokens
+            n = int(mask_np[i, :budget].sum())
+            toks = comp_np[i, :n]
+            reason = "eos" if n and toks[-1] == EOS else "length"
+            out.append(GenerationResult(
+                rid=req.rid, tokens=toks.astype(np.int32),
+                logps=lp_np[i, :n].astype(np.float32),
+                finish_reason=reason, prompt_len=req.prompt_len,
+                ttft_s=elapsed, latency_s=elapsed))
+        return out
 
 
 # --------------------------------------------------------------------------
-# dispatch
+# factory
+
+
+def build_engine(cfg: ModelConfig, params, serve: ServeConfig, *,
+                 rl: Optional[RLConfig] = None,
+                 vocab_limit: Optional[int] = None,
+                 memory: Optional[jax.Array] = None,
+                 plan=None,
+                 key: Optional[jax.Array] = None):
+    """Construct the engine a ``ServeConfig`` describes.
+
+    ``rl`` carries the deployment's sampling profile (every request must
+    match it); ``plan`` is the resolved ExecutionPlan for ``serve.mesh``
+    (callers that already placed ``params`` pass their plan). Falls back
+    to the static engine — with a warning — for architectures the paged
+    cache can't serve and for encoder/memory models.
+    """
+    rl = rl or RLConfig(engine=serve.engine)
+    if serve.paged_attn_impl:
+        cfg = dataclasses.replace(cfg, paged_attn_impl=serve.paged_attn_impl)
+    if serve.engine == "continuous":
+        if memory is None and paged_cache_supported(cfg):
+            return ContinuousEngine(
+                cfg, params, rl=rl,
+                max_total_tokens=serve.max_total_tokens,
+                num_slots=serve.num_slots, page_size=serve.page_size,
+                sync_every=serve.sync_every,
+                prefill_chunk=serve.prefill_chunk or None,
+                num_pages=serve.resolved_num_pages,
+                vocab_limit=vocab_limit, plan=plan,
+                prefix_cache=serve.prefix_cache,
+                prefix_cache_entries=serve.prefix_cache_entries, key=key)
+        warnings.warn(f"{cfg.name}: continuous engine unsupported for this "
+                      "architecture/memory setup; serving static",
+                      stacklevel=2)
+    return StaticEngine(cfg, params, rl=rl, vocab_limit=vocab_limit,
+                        memory=memory, plan=plan, key=key)
+
+
+# --------------------------------------------------------------------------
+# legacy batch entry point (deprecated shim)
 
 
 def generate(cfg: ModelConfig, rl: RLConfig, params, prompts: jax.Array,
@@ -338,9 +216,15 @@ def generate(cfg: ModelConfig, rl: RLConfig, params, prompts: jax.Array,
              engine: Optional[str] = None,
              plan=None,
              **continuous_kwargs) -> Dict[str, jax.Array]:
-    """Returns a rollout dict:
+    """Batched generation over ``prompts`` (B, Tp). Returns a rollout dict:
     tokens (B, Tp+max_new) | completions (B, max_new) |
     sampler_lp (B, max_new) engine-side logps | comp_mask (B, max_new).
+
+    .. deprecated::
+        This is the pre-request-API surface, kept as a thin shim for the
+        training loop and existing callers. New code should
+        ``build_engine(cfg, params, ServeConfig(...))`` once and call
+        ``engine.generate([Request(...), ...])`` — see README "Serving".
 
     ``engine`` (default ``rl.engine``) picks the static scan or the
     continuous-batching slot pool; architectures the paged cache can't
@@ -397,3 +281,8 @@ def token_logps(cfg: ModelConfig, params, tokens: jax.Array, *,
     impl = None if logprob_impl == "fused" else logprob_impl
     lp, _ = fused_token_logprob(logits, tokens[:, 1:], impl=impl)
     return lp
+
+
+__all__ = ["generate", "generate_continuous", "token_logps", "build_engine",
+           "StaticEngine", "ContinuousEngine", "rollout_from_results",
+           "GenerationResult", "Request", "SamplingParams"]

@@ -38,14 +38,25 @@ def pages_for(total_len: int, page_size: int) -> int:
 
 
 class PageAllocator:
-    """Free-list page allocator. Page 0 (scratch) is never handed out."""
+    """Refcounted free-list page allocator. Page 0 (scratch) is never
+    handed out.
+
+    ``alloc`` hands out pages at refcount 1; ``retain``/``release`` move
+    the count up and down, and a page returns to the free list only when
+    its count hits zero. This is what lets N requests share the KV pages
+    of a common prompt prefix: each sharer (and the prefix cache itself)
+    holds one reference, and the physical page outlives any individual
+    request. ``free`` is the legacy single-owner spelling of ``release``
+    — releasing a page that is not live still raises, preserving the old
+    double-free guard.
+    """
 
     def __init__(self, num_pages: int) -> None:
         if num_pages < 2:
             raise ValueError("need at least one scratch + one usable page")
         self.num_pages = num_pages
         self._free: List[int] = list(range(num_pages - 1, 0, -1))
-        self._live: set = set()
+        self._refs: Dict[int, int] = {}
 
     @property
     def available(self) -> int:
@@ -53,25 +64,47 @@ class PageAllocator:
 
     @property
     def in_use(self) -> int:
-        return len(self._live)
+        return len(self._refs)
+
+    def refcount(self, page: int) -> int:
+        return self._refs.get(page, 0)
 
     def alloc(self, n: int) -> Optional[List[int]]:
-        """Pop ``n`` pages, or None if the pool can't satisfy the request
-        (the caller defers admission until pages free up)."""
+        """Pop ``n`` pages at refcount 1, or None if the pool can't
+        satisfy the request (the caller defers admission — or evicts
+        prefix-cache entries — until pages free up)."""
         if n < 0:
             raise ValueError(f"alloc({n})")
         if n > len(self._free):
             return None
         pages = [self._free.pop() for _ in range(n)]
-        self._live.update(pages)
+        for pg in pages:
+            self._refs[pg] = 1
         return pages
 
-    def free(self, pages: List[int]) -> None:
+    def retain(self, pages: List[int]) -> None:
+        """Add one reference to each live page (shared-prefix admission)."""
         for pg in pages:
-            if pg not in self._live:
+            if pg not in self._refs:
+                raise ValueError(f"retain of dead / foreign page {pg}")
+            self._refs[pg] += 1
+
+    def release(self, pages: List[int]) -> List[int]:
+        """Drop one reference per page; pages whose count hits zero go
+        back on the free list (returned, in order)."""
+        freed: List[int] = []
+        for pg in pages:
+            if pg not in self._refs:
                 raise ValueError(f"double free / foreign page {pg}")
-            self._live.remove(pg)
-            self._free.append(pg)
+            self._refs[pg] -= 1
+            if self._refs[pg] == 0:
+                del self._refs[pg]
+                self._free.append(pg)
+                freed.append(pg)
+        return freed
+
+    # legacy single-owner alias (pre-refcount callers and tests)
+    free = release
 
 
 def init_paged_pool(cfg: ModelConfig, num_pages: int, page_size: int, *,

@@ -10,6 +10,21 @@ import jax.numpy as jnp
 NEG_INF = -1e30
 
 
+def mask_vocab(lg: jax.Array, vocab_limit: int) -> jax.Array:
+    """Mask padded-vocab tail logits (shared by both engines)."""
+    if vocab_limit < lg.shape[-1]:
+        bad = jnp.arange(lg.shape[-1]) >= vocab_limit
+        lg = jnp.where(bad, NEG_INF, lg)
+    return lg
+
+
+def model_logp(last: jax.Array, tok: jax.Array) -> jax.Array:
+    """Full-model logp of the drawn token (what the learner's
+    teacher-forced recompute sees — vLLM convention)."""
+    full_lp = jax.nn.log_softmax(last.astype(jnp.float32), axis=-1)
+    return jnp.take_along_axis(full_lp, tok[:, None], axis=-1)[:, 0]
+
+
 def filter_logits(logits: jax.Array, *, temperature: float = 1.0,
                   top_k: int = 0, top_p: float = 1.0) -> jax.Array:
     """Apply temperature then top-k then top-p (nucleus) filtering.

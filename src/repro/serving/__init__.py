@@ -1,0 +1,22 @@
+"""SLO serving front door for the generation engines.
+
+- :mod:`repro.serving.api` — the request-level vocabulary
+  (``SamplingParams`` / ``Request`` / ``GenerationResult`` / ``Engine``);
+- :mod:`repro.serving.admission` — admission control against the real KV
+  page budget (feasibility, queue caps, deadline triage);
+- :mod:`repro.serving.telemetry` — p50/p99 TTFT, per-slot throughput;
+- :mod:`repro.serving.server` — the asyncio HTTP/websocket front door
+  (imported lazily: it pulls in the engines, which import this package's
+  ``api`` module).
+"""
+from repro.serving.admission import (EXPIRED, INFEASIBLE, OK, OVERLOADED,
+                                     QUEUE_FULL, AdmissionController,
+                                     AdmissionDecision)
+from repro.serving.api import (Engine, GenerationResult, Request,
+                               SamplingParams, TokenEvent)
+from repro.serving.telemetry import ServeTelemetry
+
+__all__ = ["SamplingParams", "Request", "GenerationResult", "TokenEvent",
+           "Engine", "AdmissionController", "AdmissionDecision",
+           "ServeTelemetry", "OK", "INFEASIBLE", "EXPIRED", "QUEUE_FULL",
+           "OVERLOADED"]

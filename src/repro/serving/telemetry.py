@@ -1,0 +1,99 @@
+"""Serving telemetry: the SLO numbers the front door reports.
+
+Collects per-request outcomes (:class:`~repro.serving.api.
+GenerationResult` carries TTFT and end-to-end latency measured on the
+submitter's clock) and engine counters, and reduces them to the numbers
+an operator actually pages on:
+
+- **p50/p99 TTFT** — time to first token, the interactive SLO;
+- **p50/p99 latency** — end-to-end completion time;
+- **tokens/s/slot** — decoded tokens per second per decode slot, the
+  serving-efficiency headline (decode wall time is approximated by the
+  window between the first and last recorded completion);
+- admission-control outcomes (rejections by reason, expirations).
+
+Percentiles use the nearest-rank method over everything recorded since
+construction (or the last ``reset``); the benchmark keeps one collector
+per load scenario. No numpy dependency on the hot path — a sorted copy
+per snapshot is fine at front-door request rates.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional
+
+from repro.serving.api import GenerationResult
+
+
+def percentile(values: List[float], q: float) -> float:
+    """Nearest-rank percentile (q in [0, 100]) of ``values``; NaN when
+    empty. Deterministic and exact for the small samples serving
+    benchmarks collect — no interpolation surprises across numpy
+    versions."""
+    vals = sorted(v for v in values if not math.isnan(v))
+    if not vals:
+        return float("nan")
+    rank = max(1, math.ceil(q / 100.0 * len(vals)))
+    return vals[min(rank, len(vals)) - 1]
+
+
+class ServeTelemetry:
+    """Accumulates per-request outcomes into SLO summary statistics."""
+
+    def __init__(self, num_slots: int) -> None:
+        self.num_slots = num_slots
+        self.reset()
+
+    def reset(self) -> None:
+        self.ttfts: List[float] = []
+        self.latencies: List[float] = []
+        self.tokens_out = 0
+        self.prefix_hit_tokens = 0
+        self.prompt_tokens = 0
+        self.completed = 0
+        self.expired = 0
+        self._t_first: Optional[float] = None
+        self._t_last: Optional[float] = None
+
+    def record(self, res: GenerationResult,
+               done_s: Optional[float] = None) -> None:
+        if res.finish_reason == "expired":
+            self.expired += 1
+            return
+        self.completed += 1
+        self.tokens_out += res.gen_count
+        self.prompt_tokens += res.prompt_len
+        self.prefix_hit_tokens += res.prefix_hit_tokens
+        self.ttfts.append(res.ttft_s)
+        self.latencies.append(res.latency_s)
+        if done_s is not None:
+            if self._t_first is None:
+                self._t_first = done_s
+            self._t_last = done_s
+
+    @property
+    def span_s(self) -> float:
+        """Wall span between the first and last recorded completion."""
+        if self._t_first is None or self._t_last is None \
+                or self._t_last <= self._t_first:
+            return float("nan")
+        return self._t_last - self._t_first
+
+    def snapshot(self) -> Dict[str, float]:
+        span = self.span_s
+        tput = float("nan") if math.isnan(span) else self.tokens_out / span
+        return {
+            "completed": self.completed,
+            "expired": self.expired,
+            "tokens_out": self.tokens_out,
+            "prompt_tokens": self.prompt_tokens,
+            "prefix_hit_tokens": self.prefix_hit_tokens,
+            "ttft_p50_s": percentile(self.ttfts, 50),
+            "ttft_p99_s": percentile(self.ttfts, 99),
+            "latency_p50_s": percentile(self.latencies, 50),
+            "latency_p99_s": percentile(self.latencies, 99),
+            "tokens_per_s": tput,
+            "tokens_per_s_per_slot": (tput / self.num_slots
+                                      if not math.isnan(tput)
+                                      else float("nan")),
+        }

@@ -9,3 +9,15 @@ jax.config.update("jax_enable_x64", False)
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.PRNGKey(0)
+
+
+# The full suite accumulates hundreds of jitted executables; XLA's CPU
+# backend can segfault compiling late modules under that accumulated
+# state (reproducible at tests/test_sampling_data.py when the 13 prior
+# modules run first). Dropping executable caches between modules keeps
+# each module's compilation independent — same idiom as the
+# jax.clear_caches() between benchmark modules in benchmarks/run.py.
+@pytest.fixture(scope="module", autouse=True)
+def _bounded_executable_cache():
+    yield
+    jax.clear_caches()
