@@ -1,0 +1,99 @@
+"""Recompile sentinel benchmark: the engine's O(log)-executables claim.
+
+Drives the continuous engine through a mixed-length workload twice under
+:class:`repro.analysis.sentinel.RecompileSentinel` and *asserts* the
+PR-5 claim the static analyzer (RA002) can only approximate: the cold
+epoch compiles at most the pow2-bucketed executable set, and a steady
+epoch — the shape distribution already seen — compiles exactly nothing.
+A failure here means someone re-introduced a per-call shape (the
+recompile storm the bucketed block-table narrowing exists to prevent).
+
+  PYTHONPATH=src python -m benchmarks.recompile_bench [--smoke]
+
+Output: CSV rows ``recompile,<epoch>,compiles<n>,bound<b>,<steps>,<s>``.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+from typing import List
+
+import jax
+import numpy as np
+
+from repro.analysis.sentinel import RecompileSentinel, pow2_bucket_count
+from repro.config import ATTN, MLP, ModelConfig, RLConfig
+from repro.models import init_params
+from repro.sampling import ContinuousEngine
+from repro.serving.api import Request, SamplingParams
+
+SMOKE_ENV = os.environ.get("BENCH_SMOKE", "0") == "1"
+
+TINY = ModelConfig(name="bench-lm", family="dense", num_layers=2,
+                   d_model=96, num_heads=4, num_kv_heads=2, d_ff=192,
+                   vocab_size=32, block_pattern=(ATTN,), ffn_pattern=(MLP,),
+                   dtype="float32", attn_impl="naive", remat=False,
+                   rope_theta=1e4)
+
+NUM_SLOTS = 4
+PREFILL_CHUNK = 4
+
+
+def _workload(rng, n_requests: int, max_total: int, rid0: int,
+              rl: RLConfig) -> List[Request]:
+    """Mixed prompt lengths and token budgets spanning the page buckets."""
+    reqs = []
+    for i in range(n_requests):
+        mnew = int(rng.integers(2, 9))
+        plen = int(rng.integers(2, max_total - mnew))
+        prompt = rng.integers(3, 20, size=plen)
+        reqs.append(Request(rid=rid0 + i, prompt=prompt,
+                            params=SamplingParams.from_rl(rl, max_new=mnew)))
+    return reqs
+
+
+def run(smoke: bool = SMOKE_ENV) -> List[str]:
+    n_requests = 12 if smoke else 48
+    max_total = 32
+    rl = RLConfig(temperature=1.0, top_k=0, top_p=1.0, max_new_tokens=8)
+    params = init_params(TINY, jax.random.PRNGKey(0))
+    eng = ContinuousEngine(TINY, params, rl=rl, max_total_tokens=max_total,
+                           num_slots=NUM_SLOTS, page_size=4, sync_every=2,
+                           prefill_chunk=PREFILL_CHUNK, vocab_limit=20,
+                           prefix_cache=False, key=jax.random.PRNGKey(1))
+    buckets = pow2_bucket_count(eng.pages_per_slot)
+    # two jitted chunk families (prefill, decode) x width buckets, plus
+    # the eager per-(slot, chunk-offset) last-logits scatter and a few
+    # one-off convert/fill executables — see tests/test_recompile.py
+    cold_bound = 2 * buckets + NUM_SLOTS * PREFILL_CHUNK + 8
+
+    rows = []
+    # the *same* shape mix both epochs: epoch 2 must be all cache hits
+    for epoch, (rid0, bound) in enumerate([(0, cold_bound), (1000, 0)]):
+        rng = np.random.default_rng(7)       # same draws, fresh rids
+        t0 = time.perf_counter()
+        with RecompileSentinel(f"epoch{epoch}") as s:
+            results = eng.generate(_workload(rng, n_requests, max_total,
+                                             rid0, rl),
+                                   key=jax.random.PRNGKey(2))
+        dt = time.perf_counter() - t0
+        assert len(results) == n_requests
+        s.assert_bound(bound, f"epoch{epoch} ({'cold' if epoch == 0 else 'steady'})")
+        steps = int(eng.stats()["decode_steps"])
+        rows.append(f"recompile,epoch{epoch},"
+                    f"compiles{s.compiles},bound{bound},"
+                    f"decode_steps{steps},{dt:.2f}s")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    for r in run(smoke=args.smoke or SMOKE_ENV):
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -31,6 +31,7 @@ MODULES = [
     ("decode", "benchmarks.decode_bench"),
     ("scaling", "benchmarks.scaling_bench"),
     ("sync", "benchmarks.sync_bench"),
+    ("sentinel", "benchmarks.recompile_bench"),
 ]
 
 # modules cheap enough for the CI smoke job ("serve" stays out: CI
@@ -43,9 +44,11 @@ MODULES = [
 # "decode" A/Bs the paged-decode hot loop (gather-legacy vs in-place
 # kernel/ref) on the temp-bytes proxy and emits BENCH_decode.json);
 # "serve_lat" drives the admission-controlled front door under Poisson/
-# bursty/overload open-loop load and emits BENCH_serve.json
+# bursty/overload open-loop load and emits BENCH_serve.json;
+# "sentinel" asserts the engine's pow2-bucketed executable bound under
+# the recompile sentinel (cold run <= bound, steady run compiles zero)
 SMOKE_MODULES = ("fig2", "theory", "logprob", "decode", "scaling", "sync",
-                 "serve_lat")
+                 "serve_lat", "sentinel")
 
 
 def main() -> None:

@@ -1,0 +1,19 @@
+"""repro.analysis — repo-specific static analysis + recompile sentinel.
+
+Run as ``python -m repro.analysis src tests benchmarks``. See README
+"Static analysis" for the rule catalogue (RA001–RA005), the
+``# noqa: RAxxx`` suppression convention, and the baseline workflow.
+"""
+from repro.analysis.core import (Finding, RepoContext, SourceFile,
+                                 collect_files, load_baseline,
+                                 run_analysis, run_rules, save_baseline)
+from repro.analysis.rules import RULE_DOCS, default_rules
+from repro.analysis.sentinel import (RecompileSentinel, executable_bound,
+                                     pow2_bucket_count)
+
+__all__ = [
+    "Finding", "RepoContext", "SourceFile", "collect_files",
+    "load_baseline", "run_analysis", "run_rules", "save_baseline",
+    "RULE_DOCS", "default_rules",
+    "RecompileSentinel", "executable_bound", "pow2_bucket_count",
+]

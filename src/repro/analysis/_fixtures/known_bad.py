@@ -1,0 +1,109 @@
+# Known-bad corpus for `python -m repro.analysis --selftest`.
+#
+# Every RA rule must fire on this file — it is the analyzer's regression
+# fixture, never imported and never executed (the `_fixtures` directory
+# is excluded from normal analysis runs and from packaging). Each block
+# below reproduces one bug class the rules exist to catch; keep the
+# blocks minimal and labelled so a selftest failure points at the rule
+# that regressed.
+import functools
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+# --- RA001: donation-after-use ------------------------------------------
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def donating_step(state, batch):
+    return state
+
+
+def ra001_read_after_donate(state, batch):
+    new_state = donating_step(state, batch)   # `state` buffer is dead now
+    stale = state["params"]                   # RA001: read of donated arg
+    return new_state, stale
+
+
+# --- RA002: jit static-arg hygiene --------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("opts", "missing"))
+def ra002_unhashable_static(x, opts: list):   # RA002: list static arg
+    return x                                  # RA002: `missing` not a param
+
+
+def ra002_jit_in_loop(xs):
+    out = []
+    for x in xs:
+        f = jax.jit(lambda v: v + 1)          # RA002: jit built per iteration
+        out.append(f(x))
+    return out
+
+
+def decode_ra002_hot(x):
+    g = jax.jit(lambda v: v * 2)              # RA002: jit built per call
+    return g(x)
+
+
+# --- RA003: host-sync in hot loops --------------------------------------
+
+@jax.jit
+def jitted_fwd(x):
+    return x * 2
+
+
+def step(x):
+    y = jitted_fwd(x)
+    loss = float(y)                           # RA003: host sync on result
+    arr = np.asarray(y)                       # RA003: host sync on result
+    return loss, arr
+
+
+# --- RA004: Pallas kernel constraints -----------------------------------
+
+def bad_kernel(x_ref, o_ref):
+    v = x_ref[0, 0]
+    if v > 0:                                 # RA004: python `if` on tracer
+        o_ref[...] = x_ref[...]
+
+
+def ra004_misaligned_call(x):
+    return pl.pallas_call(
+        bad_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        in_specs=[pl.BlockSpec((8, 100), lambda i: (i, 0))],   # RA004: 100
+        out_specs=pl.BlockSpec((8, 100), lambda i: (i, 0)),
+        grid=(1,),
+    )(x)
+
+
+# --- RA005: unlocked cross-thread mutation ------------------------------
+
+class SharedCounter:
+    def __init__(self):
+        self.count = 0
+        self.items = []
+        self._lock = threading.Lock()
+
+    def bump(self):
+        self.count += 1                       # RA005: no lock held
+        self.items.append(self.count)         # RA005: no lock held
+
+    def bump_locked(self):                    # exempt: caller holds lock
+        self.count += 1
+
+    def run(self):
+        t = threading.Thread(target=self._loop)
+        t.start()
+
+    def _loop(self):
+        while True:
+            self.bump()
+
+
+_ = (jnp, ra001_read_after_donate, ra002_unhashable_static,
+     ra002_jit_in_loop, decode_ra002_hot, step, ra004_misaligned_call,
+     SharedCounter)

@@ -1,0 +1,739 @@
+"""The RA rule set — repo-specific correctness contracts, machine-checked.
+
+Each rule is one small visitor over the shared parse (see
+:mod:`repro.analysis.core`). The contracts they enforce exist elsewhere
+only as docstring convention:
+
+- **RA001 donation-after-use** — a buffer passed to a ``donate_argnums``
+  call is dead; reading it again before reassignment is the exact bug
+  class ``LearnerNode``'s plan-placed copies defend against by hand.
+- **RA002 jit static-arg hygiene** — every ``static_argnames`` target
+  must resolve to a hashable/frozen type, and ``jax.jit`` wrappers must
+  not be constructed per call (recompile storm).
+- **RA003 host-sync in hot loops** — ``float()`` / ``.item()`` /
+  ``np.asarray()`` / ``jax.device_get`` on jitted-call results inside
+  engine hot paths blocks the dispatch pipeline; deliberate sync points
+  carry a ``# noqa: RA003`` with a rationale or a baseline entry.
+- **RA004 Pallas kernel constraints** — literal BlockSpec tiles must be
+  8/128-aligned (or 1 / symbolic, e.g. the ``_fit_block`` idiom), and
+  kernel bodies must branch with ``pl.when`` / ``jnp.where``, never a
+  Python ``if`` on a tracer.
+- **RA005 unlocked cross-thread mutation** — classes handed to
+  ``threading.Thread`` targets must guard every ``self`` mutation with
+  ``self._lock`` (methods named ``*_locked`` assert the caller holds it).
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from repro.analysis.core import (Finding, RepoContext, SourceFile,
+                                 all_params, assign_targets,
+                                 const_str_tuple,
+                                 enclosing_class, enclosing_function,
+                                 enclosing_statement, has_decorator,
+                                 jit_wrap_call, keyword_value,
+                                 loop_ancestors, spelling)
+
+# Function names treated as serving/training hot paths by RA002/RA003.
+_HOT_EXACT = {"step", "generate", "train_on", "_sampler_loop"}
+_HOT_RE = re.compile(r"decode|prefill")
+
+
+def _is_hot_function(fn: ast.AST) -> bool:
+    name = getattr(fn, "name", "")
+    return name in _HOT_EXACT or bool(_HOT_RE.search(name))
+
+
+def _function_statements(fn: ast.AST) -> List[ast.stmt]:
+    """Every statement in ``fn`` (nested suites flattened), source order,
+    excluding nested function/class bodies."""
+    out: List[ast.stmt] = []
+
+    def visit(body):
+        for stmt in body:
+            out.append(stmt)
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue
+            for field in ("body", "orelse", "finalbody"):
+                visit(getattr(stmt, field, []) or [])
+            for handler in getattr(stmt, "handlers", []) or []:
+                visit(handler.body)
+
+    visit(fn.body)
+    return out
+
+
+def _reads_in(stmt: ast.stmt, target: str) -> bool:
+    """Does ``stmt`` read ``target`` (Name/Attribute load)?"""
+    for node in ast.walk(stmt):
+        if isinstance(node, (ast.Name, ast.Attribute)) \
+                and isinstance(getattr(node, "ctx", None), ast.Load) \
+                and spelling(node) == target:
+            return True
+    return False
+
+
+class Rule:
+    code = "RA000"
+    name = "base"
+
+    def check(self, f: SourceFile, ctx: RepoContext) -> Iterator[Finding]:
+        raise NotImplementedError
+
+
+# -------------------------------------------------------------------------
+
+
+class DonationAfterUse(Rule):
+    """RA001: a variable passed in a donated argument position is read
+    again before reassignment."""
+
+    code = "RA001"
+    name = "donation-after-use"
+
+    def check(self, f: SourceFile, ctx: RepoContext) -> Iterator[Finding]:
+        for call in ast.walk(f.tree):
+            if not isinstance(call, ast.Call):
+                continue
+            callee = spelling(call.func)
+            if callee is None:
+                continue
+            don = ctx.donated_params(callee)
+            if don is None:
+                continue
+            indices, params = don
+            donated_args: List[str] = []
+            for k in indices:
+                if k < len(call.args):
+                    sp = spelling(call.args[k])
+                    if sp:
+                        donated_args.append(sp)
+                elif params and k < len(params):
+                    for kw in call.keywords:
+                        if kw.arg == params[k]:
+                            sp = spelling(kw.value)
+                            if sp:
+                                donated_args.append(sp)
+            if not donated_args:
+                continue
+            fn = enclosing_function(call)
+            if fn is None:
+                continue
+            stmt = enclosing_statement(call)
+            rebound = set(assign_targets(stmt))
+            stmts = _function_statements(fn)
+            try:
+                idx = stmts.index(stmt)
+            except ValueError:
+                continue
+            loops = loop_ancestors(stmt, stop_at=fn)
+            for target in donated_args:
+                if target in rebound:
+                    continue        # x = f(x): donated buffer rebound
+                use = self._first_use_after(stmts, idx, target)
+                if use is None and loops:
+                    # the loop re-executes its body: reads at the top of
+                    # the loop see the donated buffer of the previous
+                    # iteration
+                    loop = loops[0]
+                    lstmts = _function_statements_of_body(loop)
+                    try:
+                        lidx = lstmts.index(stmt)
+                    except ValueError:
+                        lidx = len(lstmts)
+                    use = self._first_use_after(lstmts, -1, target,
+                                                stop=lidx)
+                if use is not None:
+                    yield f.finding(
+                        self.code, use,
+                        f"`{target}` was donated to `{callee}` (line "
+                        f"{call.lineno}) and is read again here before "
+                        "reassignment — the buffer is dead after "
+                        "donation; rebind the result or pass a copy")
+
+    @staticmethod
+    def _first_use_after(stmts: List[ast.stmt], idx: int, target: str,
+                         stop: Optional[int] = None) -> Optional[ast.stmt]:
+        for j in range(idx + 1, stop if stop is not None else len(stmts)):
+            s = stmts[j]
+            binds = target in assign_targets(s)
+            reads = _reads_in(s, target)
+            if reads and not (binds and isinstance(s, ast.Assign)
+                              and not _reads_in_value_only(s, target)):
+                return s
+            if binds:
+                return None
+        return None
+
+
+def _reads_in_value_only(stmt: ast.Assign, target: str) -> bool:
+    """True when the only appearance of ``target`` in an assignment is on
+    the target side (a pure rebind, not a read)."""
+    return not _reads_in_expr(stmt.value, target)
+
+
+def _reads_in_expr(expr: ast.AST, target: str) -> bool:
+    for node in ast.walk(expr):
+        if isinstance(node, (ast.Name, ast.Attribute)) \
+                and spelling(node) == target:
+            return True
+    return False
+
+
+def _function_statements_of_body(loop: ast.AST) -> List[ast.stmt]:
+    out: List[ast.stmt] = []
+
+    def visit(body):
+        for stmt in body:
+            out.append(stmt)
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue
+            for field in ("body", "orelse", "finalbody"):
+                visit(getattr(stmt, field, []) or [])
+            for handler in getattr(stmt, "handlers", []) or []:
+                visit(handler.body)
+
+    visit(loop.body)
+    return out
+
+
+# -------------------------------------------------------------------------
+
+
+_UNHASHABLE_BASES = {"list", "List", "dict", "Dict", "set", "Set",
+                     "bytearray", "MutableMapping", "MutableSequence",
+                     "MutableSet", "ndarray", "Array", "ArrayLike",
+                     "DeviceArray"}
+_HASHABLE_BASES = {"int", "float", "bool", "str", "bytes", "complex",
+                   "tuple", "Tuple", "frozenset", "FrozenSet", "type",
+                   "Type", "Callable", "Literal", "Any", "None",
+                   "NoneType"}
+
+
+class JitStaticArgHygiene(Rule):
+    """RA002: static_argnames must resolve to hashable/frozen types, and
+    jit wrappers must not be constructed per call."""
+
+    code = "RA002"
+    name = "jit-static-arg-hygiene"
+
+    def check(self, f: SourceFile, ctx: RepoContext) -> Iterator[Finding]:
+        yield from self._check_static_args(f, ctx)
+        yield from self._check_construction_sites(f)
+
+    # ---- half 1: static_argnames hashability ---------------------------
+    def _check_static_args(self, f: SourceFile, ctx: RepoContext
+                           ) -> Iterator[Finding]:
+        for fn in ast.walk(f.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            for dec in fn.decorator_list:
+                wrap = jit_wrap_call(dec)
+                if wrap is None:
+                    continue
+                statics = const_str_tuple(
+                    keyword_value(wrap, "static_argnames"))
+                if not statics:
+                    continue
+                params = {p.arg: p for p in all_params(fn)}
+                for sname in statics:
+                    if sname not in params:
+                        yield f.finding(
+                            self.code, dec,
+                            f"static_argnames names `{sname}` but "
+                            f"`{fn.name}` has no such parameter")
+                        continue
+                    ann = params[sname].annotation
+                    verdict = self._classify(ann, ctx)
+                    if verdict is not None:
+                        yield f.finding(
+                            self.code, params[sname],
+                            f"static arg `{sname}` of `{fn.name}` is "
+                            f"annotated {verdict} — static args are jit "
+                            "cache keys and must be hashable (frozen "
+                            "dataclass / scalar / tuple)")
+
+    def _classify(self, ann: Optional[ast.AST], ctx: RepoContext
+                  ) -> Optional[str]:
+        """None = fine/unknown; else a description of the problem."""
+        if ann is None:
+            return None
+        if isinstance(ann, ast.Constant) and isinstance(ann.value, str):
+            try:
+                ann = ast.parse(ann.value, mode="eval").body
+            except SyntaxError:
+                return None
+        if isinstance(ann, ast.Subscript):
+            base = (spelling(ann.value) or "").split(".")[-1]
+            if base in ("Optional", "Union"):
+                inner = ann.slice
+                elts = inner.elts if isinstance(inner, ast.Tuple) else [inner]
+                for el in elts:
+                    v = self._classify(el, ctx)
+                    if v is not None:
+                        return v
+                return None
+            if base in _UNHASHABLE_BASES:
+                return f"`{base}[...]` (unhashable)"
+            return None
+        if isinstance(ann, ast.BinOp) and isinstance(ann.op, ast.BitOr):
+            for side in (ann.left, ann.right):
+                v = self._classify(side, ctx)
+                if v is not None:
+                    return v
+            return None
+        base = (spelling(ann) or "").split(".")[-1]
+        if not base:
+            return None
+        if base in _UNHASHABLE_BASES:
+            return f"`{base}` (unhashable)"
+        if base in ctx.plain_dataclasses:
+            return (f"`{base}`, a non-frozen dataclass (declare "
+                    "@dataclass(frozen=True) so it hashes by value)")
+        return None
+
+    # ---- half 2: per-call jit construction -----------------------------
+    def _check_construction_sites(self, f: SourceFile) -> Iterator[Finding]:
+        for node in ast.walk(f.tree):
+            wrap = jit_wrap_call(node)
+            if wrap is None:
+                continue
+            parent = getattr(node, "ra_parent", None)
+            # decorators run once at def time
+            if isinstance(parent, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node in parent.decorator_list:
+                continue
+            # jax.jit(f).lower(...) is one-shot AOT lowering, not a
+            # per-call cache (the dry-run idiom)
+            if isinstance(parent, ast.Attribute) and parent.attr == "lower":
+                continue
+            # jax.jit(...)(x): a fresh wrapper (and usually a fresh
+            # executable) every evaluation
+            if isinstance(parent, ast.Call) and parent.func is node:
+                yield f.finding(
+                    self.code, node,
+                    "`jax.jit(...)` constructed and invoked in one "
+                    "expression — the wrapper (and its compile cache) is "
+                    "rebuilt per call; hoist it to module scope or an "
+                    "lru_cache'd builder")
+                continue
+            fn = enclosing_function(node)
+            if fn is None:
+                continue        # module scope: built once at import
+            if has_decorator(fn, "lru_cache", "cache"):
+                continue        # the step.py cached-builder idiom
+            if loop_ancestors(node, stop_at=fn):
+                yield f.finding(
+                    self.code, node,
+                    f"`jax.jit` constructed inside a loop in "
+                    f"`{fn.name}` — every iteration builds a fresh "
+                    "wrapper; hoist it out or wrap the builder in "
+                    "functools.lru_cache")
+            elif _is_hot_function(fn):
+                yield f.finding(
+                    self.code, node,
+                    f"`jax.jit` constructed inside hot-path function "
+                    f"`{fn.name}` — a per-call wrapper recompiles every "
+                    "step; build it once (module scope, __init__, or an "
+                    "lru_cache'd builder)")
+
+
+# -------------------------------------------------------------------------
+
+
+_SYNC_CALLS = {"float", "int", "bool", "np.asarray", "np.array",
+               "numpy.asarray", "numpy.array", "jax.device_get",
+               "device_get"}
+_SYNC_METHODS = {"item", "tolist", "block_until_ready"}
+
+
+class HostSyncInHotLoop(Rule):
+    """RA003: host synchronization on jitted-call results inside engine
+    hot paths. Deliberate sync points are documented with a noqa or a
+    baseline entry — that is the point: syncs become visible."""
+
+    code = "RA003"
+    name = "host-sync-in-hot-loop"
+
+    def check(self, f: SourceFile, ctx: RepoContext) -> Iterator[Finding]:
+        for fn in ast.walk(f.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if not _is_hot_function(fn):
+                continue
+            tainted = self._device_results(fn, ctx)
+            if not tainted:
+                continue
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                callee = spelling(node.func) or ""
+                is_sync = callee in _SYNC_CALLS
+                if isinstance(node.func, ast.Attribute) \
+                        and node.func.attr in _SYNC_METHODS:
+                    is_sync = True
+                    args: List[ast.AST] = [node.func.value]
+                else:
+                    args = list(node.args)
+                if not is_sync:
+                    continue
+                hit = next((sp for a in args
+                            for sp in self._spellings(a) if sp in tainted),
+                           None)
+                if hit is not None:
+                    yield f.finding(
+                        self.code, node,
+                        f"host sync `{callee or node.func.attr}` on "
+                        f"jitted result `{hit}` inside hot path "
+                        f"`{fn.name}` — blocks dispatch; if deliberate, "
+                        "annotate `# noqa: RA003` with a rationale")
+
+    @staticmethod
+    def _device_results(fn: ast.AST, ctx: RepoContext) -> Set[str]:
+        """Spellings assigned from calls to known-jitted callables."""
+        out: Set[str] = set()
+        for stmt in ast.walk(fn):
+            if not isinstance(stmt, ast.Assign):
+                continue
+            calls = [n for n in ast.walk(stmt.value)
+                     if isinstance(n, ast.Call)
+                     and spelling(n.func) is not None
+                     and ctx.is_jitted_callable(spelling(n.func))]
+            if calls:
+                out.update(assign_targets(stmt))
+        return out
+
+    @staticmethod
+    def _spellings(expr: ast.AST) -> Iterator[str]:
+        for node in ast.walk(expr):
+            sp = spelling(node)
+            if sp:
+                yield sp
+
+
+# -------------------------------------------------------------------------
+
+
+class PallasKernelConstraints(Rule):
+    """RA004: TPU kernel hygiene — literal BlockSpec tiles 8/128-aligned,
+    no Python-level control flow on tracer (Ref-derived) values inside
+    kernel bodies (use ``pl.when`` / ``jnp.where``)."""
+
+    code = "RA004"
+    name = "pallas-kernel-constraints"
+
+    def check(self, f: SourceFile, ctx: RepoContext) -> Iterator[Finding]:
+        if "pallas" not in f.source:
+            return
+        yield from self._check_blockspecs(f)
+        for kfn in self._kernel_functions(f):
+            yield from self._check_kernel_body(f, kfn)
+
+    # ---- BlockSpec literal tiles ---------------------------------------
+    def _check_blockspecs(self, f: SourceFile) -> Iterator[Finding]:
+        for node in ast.walk(f.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if (spelling(node.func) or "").split(".")[-1] != "BlockSpec":
+                continue
+            shape = node.args[0] if node.args else None
+            if not isinstance(shape, (ast.Tuple, ast.List)):
+                continue
+            elts = shape.elts
+            for pos, mult in ((-1, 128), (-2, 8)):
+                if len(elts) < abs(pos):
+                    continue
+                el = elts[pos]
+                if isinstance(el, ast.Constant) \
+                        and isinstance(el.value, int):
+                    v = el.value
+                    if v != 1 and v % mult != 0:
+                        yield f.finding(
+                            self.code, el,
+                            f"BlockSpec tile dim {v} in the "
+                            f"{'lane' if mult == 128 else 'sublane'} "
+                            f"position is not {mult}-aligned (and not 1) "
+                            "— Mosaic pads or rejects it; derive the "
+                            "tile via the `_fit_block` idiom")
+
+    # ---- kernel bodies --------------------------------------------------
+    def _kernel_functions(self, f: SourceFile) -> List[ast.FunctionDef]:
+        names: Set[str] = set()
+        for node in ast.walk(f.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if (spelling(node.func) or "").split(".")[-1] != "pallas_call":
+                continue
+            target = node.args[0] if node.args else None
+            if isinstance(target, ast.Call) and \
+                    (spelling(target.func) or "").split(".")[-1] == "partial":
+                target = target.args[0] if target.args else None
+            sp = spelling(target) if target is not None else None
+            if sp:
+                names.add(sp.split(".")[-1])
+        return [n for n in ast.walk(f.tree)
+                if isinstance(n, ast.FunctionDef) and n.name in names]
+
+    def _check_kernel_body(self, f: SourceFile, kfn: ast.FunctionDef
+                           ) -> Iterator[Finding]:
+        tainted = self._taint(kfn)
+        for node in ast.walk(kfn):
+            if isinstance(node, (ast.If, ast.While)):
+                hit = self._tainted_in(node.test, tainted)
+                if hit:
+                    kw = "while" if isinstance(node, ast.While) else "if"
+                    yield f.finding(
+                        self.code, node,
+                        f"Python `{kw}` on tracer value `{hit}` inside "
+                        f"kernel `{kfn.name}` — kernel-side control flow "
+                        "must use pl.when / jnp.where (a Python branch "
+                        "is resolved at trace time, not per grid step)")
+            elif isinstance(node, ast.Assert):
+                hit = self._tainted_in(node.test, tainted)
+                if hit:
+                    yield f.finding(
+                        self.code, node,
+                        f"Python `assert` on tracer value `{hit}` inside "
+                        f"kernel `{kfn.name}` — raises at trace time; "
+                        "use checkify or a pl.when-guarded debug path")
+
+    @staticmethod
+    def _taint(kfn: ast.FunctionDef) -> Set[str]:
+        """Names carrying per-grid-step (tracer) values: Ref reads and
+        pl.program_id results, propagated through assignments.
+        ``ref.shape`` / partial-bound config scalars stay untainted."""
+        tainted: Set[str] = set()
+        refs = {p.arg for p in all_params(kfn) if p.arg.endswith("_ref")}
+
+        def expr_tainted(expr: ast.AST) -> bool:
+            for n in ast.walk(expr):
+                if isinstance(n, ast.Subscript):
+                    base = spelling(n.value)
+                    if base in refs:
+                        return True
+                if isinstance(n, ast.Call) and \
+                        (spelling(n.func) or "").endswith("program_id"):
+                    return True
+                sp = spelling(n)
+                if sp in tainted:
+                    return True
+            return False
+
+        changed = True
+        while changed:
+            changed = False
+            for stmt in ast.walk(kfn):
+                if isinstance(stmt, ast.Assign) \
+                        and expr_tainted(stmt.value):
+                    for t in assign_targets(stmt):
+                        if t not in tainted:
+                            tainted.add(t)
+                            changed = True
+        return tainted | refs
+
+    @staticmethod
+    def _tainted_in(expr: ast.AST, tainted: Set[str]) -> Optional[str]:
+        for n in ast.walk(expr):
+            if isinstance(n, ast.Subscript):
+                base = spelling(n.value)
+                if base in tainted:
+                    return base
+            if isinstance(n, ast.Call) and \
+                    (spelling(n.func) or "").endswith("program_id"):
+                return "pl.program_id(...)"
+            sp = spelling(n)
+            if sp in tainted and isinstance(n, ast.Name):
+                return sp
+        return None
+
+
+# -------------------------------------------------------------------------
+
+
+_MUTATOR_METHODS = {"append", "appendleft", "add", "update", "pop",
+                    "popitem", "popleft", "extend", "insert", "remove",
+                    "discard", "clear", "setdefault", "difference_update",
+                    "intersection_update", "symmetric_difference_update"}
+# attribute types that are themselves synchronized — calling into them
+# from several threads is their job
+_THREADSAFE_CTORS = {"Queue", "LifoQueue", "PriorityQueue", "SimpleQueue",
+                     "Event", "Lock", "RLock", "Condition", "Semaphore",
+                     "BoundedSemaphore", "Barrier"}
+
+
+class UnlockedCrossThreadMutation(Rule):
+    """RA005: classes handed to ``threading.Thread`` targets (directly or
+    via annotated parameters of the target function) must guard every
+    ``self`` mutation with ``with self._lock`` — methods named
+    ``*_locked`` are exempt (convention: the caller holds the lock)."""
+
+    code = "RA005"
+    name = "unlocked-cross-thread-mutation"
+
+    def check(self, f: SourceFile, ctx: RepoContext) -> Iterator[Finding]:
+        shared = self._thread_shared_classes(f, ctx)
+        for cls_name in sorted(shared):
+            entry = ctx.class_defs.get(cls_name)
+            if entry is None:
+                continue
+            cf, cls = entry
+            if cf.rel != f.rel:
+                # report in the file that *defines* the class only when
+                # that file is the one being checked — avoids duplicate
+                # findings when both files are in the run set. The class
+                # is checked when its defining file comes through.
+                if cls_name not in self._thread_shared_classes(cf, ctx):
+                    yield from self._check_class(cf, cls)
+                continue
+            yield from self._check_class(cf, cls)
+
+    # ---- which classes cross threads -----------------------------------
+    def _thread_shared_classes(self, f: SourceFile, ctx: RepoContext
+                               ) -> Set[str]:
+        shared: Set[str] = set()
+        for node in ast.walk(f.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            callee = (spelling(node.func) or "").split(".")[-1]
+            if callee != "Thread":
+                continue
+            target = keyword_value(node, "target")
+            if target is None and node.args:
+                target = node.args[0]
+            if target is None:
+                continue
+            sp = spelling(target) or ""
+            entry_fn: Optional[ast.AST] = None
+            if sp.startswith("self."):
+                cls = enclosing_class(node)
+                if cls is not None:
+                    shared.add(cls.name)
+                    entry_fn = next(
+                        (m for m in cls.body
+                         if isinstance(m, (ast.FunctionDef,
+                                           ast.AsyncFunctionDef))
+                         and m.name == sp.split(".", 1)[1]), None)
+            else:
+                base = sp.split(".")[-1]
+                entry_fn = next(
+                    (n for n in ast.walk(f.tree)
+                     if isinstance(n, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef))
+                     and n.name == base), None)
+            if entry_fn is not None:
+                for p in all_params(entry_fn):
+                    ann = p.annotation
+                    if isinstance(ann, ast.Constant) \
+                            and isinstance(ann.value, str):
+                        try:
+                            ann = ast.parse(ann.value, mode="eval").body
+                        except SyntaxError:
+                            ann = None
+                    base = (spelling(ann) or "").split(".")[-1] \
+                        if ann is not None else ""
+                    if base in ctx.class_defs:
+                        shared.add(base)
+        return shared
+
+    # ---- per-class check ------------------------------------------------
+    def _check_class(self, f: SourceFile, cls: ast.ClassDef
+                     ) -> Iterator[Finding]:
+        safe_attrs = self._threadsafe_attrs(cls)
+        for method in cls.body:
+            if not isinstance(method, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef)):
+                continue
+            if method.name in ("__init__", "__post_init__") \
+                    or method.name.endswith("_locked"):
+                continue
+            for node, desc in self._mutations(method):
+                attr = desc.split(".")[1] if "." in desc else desc
+                if attr in safe_attrs or "lock" in attr:
+                    continue
+                if self._under_lock(node, method):
+                    continue
+                yield f.finding(
+                    self.code, node,
+                    f"`{cls.name}.{method.name}` mutates `{desc}` "
+                    "without holding self._lock, but instances of "
+                    f"`{cls.name}` cross threads (threading.Thread "
+                    "target) — guard with `with self._lock:` or rename "
+                    "the method `*_locked` if the caller holds it")
+
+    @staticmethod
+    def _threadsafe_attrs(cls: ast.ClassDef) -> Set[str]:
+        out: Set[str] = set()
+        init = next((m for m in cls.body
+                     if isinstance(m, ast.FunctionDef)
+                     and m.name == "__init__"), None)
+        if init is None:
+            return out
+        for stmt in ast.walk(init):
+            if not isinstance(stmt, ast.Assign):
+                continue
+            if not isinstance(stmt.value, ast.Call):
+                continue
+            ctor = (spelling(stmt.value.func) or "").split(".")[-1]
+            if ctor in _THREADSAFE_CTORS:
+                for t in assign_targets(stmt):
+                    if t.startswith("self."):
+                        out.add(t.split(".", 1)[1])
+        return out
+
+    @staticmethod
+    def _mutations(method: ast.AST) -> Iterator[Tuple[ast.AST, str]]:
+        for node in ast.walk(method):
+            if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                for t in targets:
+                    stack = [t]
+                    while stack:
+                        el = stack.pop()
+                        if isinstance(el, (ast.Tuple, ast.List)):
+                            stack.extend(el.elts)
+                            continue
+                        base = el
+                        if isinstance(base, ast.Subscript):
+                            base = base.value
+                        sp = spelling(base) or ""
+                        if sp.startswith("self."):
+                            yield node, ".".join(sp.split(".")[:2])
+            elif isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in _MUTATOR_METHODS:
+                sp = spelling(node.func.value) or ""
+                if sp.startswith("self."):
+                    yield node, ".".join(sp.split(".")[:2])
+
+    @staticmethod
+    def _under_lock(node: ast.AST, method: ast.AST) -> bool:
+        cur = getattr(node, "ra_parent", None)
+        while cur is not None and cur is not method:
+            if isinstance(cur, (ast.With, ast.AsyncWith)):
+                for item in cur.items:
+                    sp = spelling(item.context_expr) or ""
+                    if isinstance(item.context_expr, ast.Call):
+                        sp = spelling(item.context_expr.func) or ""
+                    if sp.startswith("self.") and "lock" in sp.lower():
+                        return True
+            cur = getattr(cur, "ra_parent", None)
+        return False
+
+
+# -------------------------------------------------------------------------
+
+
+def default_rules() -> List[Rule]:
+    return [DonationAfterUse(), JitStaticArgHygiene(), HostSyncInHotLoop(),
+            PallasKernelConstraints(), UnlockedCrossThreadMutation()]
+
+
+RULE_DOCS: Dict[str, str] = {
+    r.code: f"{r.name}: {r.__doc__.strip().splitlines()[0]}"
+    for r in default_rules()
+}

@@ -1,0 +1,112 @@
+"""Runtime recompile sentinel — the dynamic twin of RA002.
+
+Counts XLA backend compiles via :mod:`jax.monitoring` event listeners so
+tests and benchmarks can assert compile *budgets*, not just eyeball them:
+the continuous engine's pow2-bucketed block tables promise O(log)
+executables over a steady run, and this is where that claim is enforced.
+
+Usage::
+
+    with RecompileSentinel() as s:
+        engine.step(); engine.step()
+    assert s.compiles <= bound
+
+Listeners in jax.monitoring are append-only (there is no unregister), so
+a single module-level listener is registered on first use and fans out to
+every active sentinel. Nested sentinels each see the compiles that happen
+while they are open.
+"""
+from __future__ import annotations
+
+import threading
+from typing import List
+
+import jax
+
+# Event key emitted once per XLA backend compile (observed on jax 0.4.x
+# CPU and TPU backends alike). Duration listeners fire with
+# (event_name, duration_secs, **kwargs).
+_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+
+_active: List["RecompileSentinel"] = []
+_active_lock = threading.Lock()
+_registered = False
+
+
+def _on_event(event: str, duration: float, **kwargs) -> None:
+    if _COMPILE_EVENT not in event:
+        return
+    with _active_lock:
+        for s in _active:
+            s._record(event)
+
+
+def _ensure_listener() -> None:
+    global _registered
+    with _active_lock:
+        if _registered:
+            return
+        jax.monitoring.register_event_duration_secs_listener(_on_event)
+        _registered = True
+
+
+class RecompileSentinel:
+    """Context manager counting XLA backend compiles while open."""
+
+    def __init__(self, label: str = "") -> None:
+        self.label = label
+        self.compiles = 0
+        self.events: List[str] = []
+        self._lock = threading.Lock()
+
+    def _record(self, event: str) -> None:
+        with self._lock:
+            self.compiles += 1
+            self.events.append(event)
+
+    def __enter__(self) -> RecompileSentinel:
+        _ensure_listener()
+        with _active_lock:
+            _active.append(self)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        with _active_lock:
+            if self in _active:
+                _active.remove(self)
+
+    def assert_bound(self, bound: int, context: str = "") -> None:
+        if self.compiles > bound:
+            where = f" [{context or self.label}]" if (context or self.label) \
+                else ""
+            raise AssertionError(
+                f"recompile sentinel{where}: {self.compiles} XLA compiles "
+                f"observed, bound is {bound}")
+
+
+def pow2_bucket_count(max_pages: int) -> int:
+    """Number of distinct block-table widths the engine's pow2 bucketing
+    (`_live_width` in sampling/continuous.py) can produce for a cap of
+    ``max_pages`` pages — the analytic executable bound per (phase,
+    batch-shape) family. Mirrors `_live_width` exactly: widths are
+    min(next_pow2(need), cap) for need in 1..cap.
+    """
+    widths = set()
+    for need in range(1, max_pages + 1):
+        w = 1
+        while w < need:
+            w *= 2
+        widths.add(min(w, max_pages))
+    return len(widths)
+
+
+def executable_bound(max_pages: int, phases: int = 3, slack: int = 4) -> int:
+    """Conservative compile-count bound for a steady engine run:
+    ``phases`` shape families (prefill chunk / decode chunk / page copy),
+    each over the pow2 width buckets, plus ``slack`` for one-off helper
+    jits (sampling kernels, logprob gather).
+    """
+    return phases * pow2_bucket_count(max_pages) + slack
+
+
+__all__ = ["RecompileSentinel", "pow2_bucket_count", "executable_bound"]

@@ -67,7 +67,7 @@ def save_pytree(tree: Any) -> bytes:
             arrays[key] = arr
     if exotic:
         arrays[_EXOTIC_META] = np.frombuffer(
-            json.dumps(exotic).encode("utf-8"), np.uint8)
+            json.dumps(exotic).encode(), np.uint8)
     np.savez(buf, **arrays)
     return buf.getvalue()
 

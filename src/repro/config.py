@@ -8,7 +8,7 @@ model code scans over homogeneous super-blocks of one pattern period.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 # Layer kinds usable in ``block_pattern``.

@@ -36,8 +36,9 @@ LONG_CONTEXT_OK = frozenset({
 def get_config(name: str) -> ModelConfig:
     try:
         return ALL[name]
-    except KeyError:
-        raise KeyError(f"unknown arch {name!r}; have {sorted(ALL)}")
+    except KeyError as e:
+        raise KeyError(
+            f"unknown arch {name!r}; have {sorted(ALL)}") from e
 
 
 def smoke(name: str, **over) -> ModelConfig:

@@ -7,7 +7,7 @@ scored on a single node, so group statistics need no cross-node gather.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, List, Tuple
+from typing import Iterator, List
 
 import numpy as np
 

@@ -12,7 +12,7 @@ need no prompt-side padding mask; the space is an ordinary token.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence, Tuple
+from typing import List, Sequence
 
 import numpy as np
 

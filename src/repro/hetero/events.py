@@ -12,24 +12,37 @@ from __future__ import annotations
 
 import heapq
 import itertools
+import threading
 from typing import Callable, List, Optional, Tuple
 
 
 class EventSim:
+    """Event queue + virtual clock.
+
+    The queue is lock-guarded so event handlers may be scheduled from
+    helper threads (the threaded hetero runtime shares stores with the
+    sim-driven one); handlers themselves always run on whichever thread
+    drives :meth:`step`, *outside* the lock, so they can reschedule
+    reentrantly."""
+
     def __init__(self) -> None:
         self.now = 0.0
         self._q: List[Tuple[float, int, Callable[[], None]]] = []
         self._counter = itertools.count()
+        self._lock = threading.Lock()
 
     def schedule(self, delay: float, fn: Callable[[], None]) -> None:
         assert delay >= 0.0, delay
-        heapq.heappush(self._q, (self.now + delay, next(self._counter), fn))
+        with self._lock:
+            heapq.heappush(self._q,
+                           (self.now + delay, next(self._counter), fn))
 
     def step(self) -> bool:
-        if not self._q:
-            return False
-        t, _, fn = heapq.heappop(self._q)
-        self.now = t
+        with self._lock:
+            if not self._q:
+                return False
+            t, _, fn = heapq.heappop(self._q)
+            self.now = t
         fn()
         return True
 
@@ -48,9 +61,11 @@ class Transport:
         self.sim = sim
         self.messages_sent = 0
         self.bytes_sent = 0
+        self._lock = threading.Lock()
 
     def send(self, delay_s: float, deliver: Callable[[], None],
              nbytes: int = 0) -> None:
-        self.messages_sent += 1
-        self.bytes_sent += nbytes
+        with self._lock:
+            self.messages_sent += 1
+            self.bytes_sent += nbytes
         self.sim.schedule(delay_s, deliver)

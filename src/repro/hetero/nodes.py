@@ -12,8 +12,9 @@
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -25,7 +26,6 @@ from repro.config import (HeteroConfig, ModelConfig, RLConfig, ServeConfig,
 from repro.core.diagnostics import MetricsHistory
 from repro.data import PromptPipeline, score_rollouts
 from repro.data.tasks import ArithmeticTask, Tokenizer
-from repro.hetero.events import EventSim, Transport
 from repro.hetero.latency import sync_delay_s
 from repro.parallel import ExecutionPlan, plan_from_flag
 from repro.sampling import (ContinuousEngine, build_engine,
@@ -101,6 +101,10 @@ class SamplerNode:
         self.version = 0
         self.rng = np.random.default_rng(seed)
         self.key = jax.random.PRNGKey(seed)
+        # instances cross threads in the threaded runtime: the node's
+        # sampler thread mutates generation/sync state while the main
+        # thread reads telemetry and drives elastic re-fits (RA005)
+        self._lock = threading.Lock()
         self.batches_generated = 0
         self.syncs = 0
         # operator telemetry: generation rate of this node (the service
@@ -131,22 +135,23 @@ class SamplerNode:
         """The node's engine, built on first use (the paged pool's budget
         needs the prompt width). Rebuilt only if the rollout shape
         changes."""
-        if self._gen_engine is None or self._engine_tp != tp:
-            serve = self.serve_cfg or ServeConfig(
-                engine=self.engine,
-                max_total_tokens=tp + self.rl.max_new_tokens,
-                num_slots=min(b, 8))
-            if serve.max_total_tokens < tp + self.rl.max_new_tokens:
-                raise ValueError(
-                    f"ServeConfig.max_total_tokens={serve.max_total_tokens} "
-                    f"< prompt width {tp} + max_new "
-                    f"{self.rl.max_new_tokens}")
-            self._gen_engine = build_engine(
-                self.cfg, self.params, serve, rl=self.rl,
-                vocab_limit=self.tok.vocab_size, plan=self.plan,
-                key=self.key)
-            self._engine_tp = tp
-        return self._gen_engine
+        with self._lock:
+            if self._gen_engine is None or self._engine_tp != tp:
+                serve = self.serve_cfg or ServeConfig(
+                    engine=self.engine,
+                    max_total_tokens=tp + self.rl.max_new_tokens,
+                    num_slots=min(b, 8))
+                if serve.max_total_tokens < tp + self.rl.max_new_tokens:
+                    raise ValueError(
+                        f"ServeConfig.max_total_tokens="
+                        f"{serve.max_total_tokens} < prompt width {tp} "
+                        f"+ max_new {self.rl.max_new_tokens}")
+                self._gen_engine = build_engine(
+                    self.cfg, self.params, serve, rl=self.rl,
+                    vocab_limit=self.tok.vocab_size, plan=self.plan,
+                    key=self.key)
+                self._engine_tp = tp
+            return self._gen_engine
 
     def generate_batch(self, now_s: float) -> RolloutBatch:
         req = self.pipeline.next_batch()
@@ -154,7 +159,8 @@ class SamplerNode:
         prompts = jnp.asarray(prompts_np)
         b, tp = prompts_np.shape
         engine = self._engine_for(tp, b)
-        self.key, k = jax.random.split(self.key)
+        with self._lock:
+            self.key, k = jax.random.split(self.key)
         t0 = time.perf_counter()
         # rid = batch row, fresh key per batch: draws are bit-identical to
         # the legacy generate() path on either engine
@@ -168,14 +174,15 @@ class SamplerNode:
             roll["stats"] = engine.stats()
         ntok = int(np.asarray(roll["comp_mask"]).sum())
         dt = time.perf_counter() - t0
-        if self.batches_generated == 0:         # jit compile folded in
-            self.warmup_tokens += ntok
-            self.warmup_seconds += dt
-        else:
-            self.tokens_generated += ntok
-            self.gen_seconds += dt
-        if "stats" in roll:
-            self.engine_stats = dict(roll["stats"])
+        with self._lock:
+            if self.batches_generated == 0:     # jit compile folded in
+                self.warmup_tokens += ntok
+                self.warmup_seconds += dt
+            else:
+                self.tokens_generated += ntok
+                self.gen_seconds += dt
+            if "stats" in roll:
+                self.engine_stats = dict(roll["stats"])
         rewards = score_rollouts(self.task, self.tok, req.problems,
                                  np.asarray(roll["completions"]),
                                  req.group_size)
@@ -191,7 +198,8 @@ class SamplerNode:
         zeros = np.zeros((b, tp - 1), np.float32)
         mask = np.concatenate([zeros, np.asarray(roll["comp_mask"])], axis=1)
         sampler_lp = np.concatenate([zeros, np.asarray(comp_lp)], axis=1)
-        self.batches_generated += 1
+        with self._lock:
+            self.batches_generated += 1
         return RolloutBatch(tokens=np.asarray(roll["tokens"]), mask=mask,
                             sampler_lp=sampler_lp, rewards=rewards,
                             version=self.version, created_s=now_s,
@@ -214,10 +222,11 @@ class SamplerNode:
             if refit:
                 # nothing (newer) published: re-place the live params so
                 # plan and placement never disagree
-                self.plan = plan
-                self.params = self.plan.device_put_params(
-                    self.cfg, self.params, copy=True)
-                self._push_params()
+                with self._lock:
+                    self.plan = plan
+                    self.params = self.plan.device_put_params(
+                        self.cfg, self.params, copy=True)
+                    self._push_params_locked()
             return 0
         # fetch against the *target* plan but commit it to self only
         # after the transport succeeds: if every retry raises, plan and
@@ -236,19 +245,22 @@ class SamplerNode:
                 # retained manifest are pinned against GC)
                 if attempt == 2:
                     raise
-        if refit:
-            self.plan = target
-        if v > self.version or refit:
-            self.params = self.plan.device_put_params(self.cfg, host_tree)
-            self._push_params()
-            if v > self.version:
-                self.version = v
-                self.syncs += 1
+        with self._lock:
+            if refit:
+                self.plan = target
+            if v > self.version or refit:
+                self.params = self.plan.device_put_params(self.cfg,
+                                                          host_tree)
+                self._push_params_locked()
+                if v > self.version:
+                    self.version = v
+                    self.syncs += 1
         return stats.bytes_on_wire
 
-    def _push_params(self) -> None:
+    def _push_params_locked(self) -> None:
         """Keep the node's engine serving the freshly synced weights —
-        the sampler-side half of the weight-sync contract."""
+        the sampler-side half of the weight-sync contract. Caller holds
+        ``self._lock``."""
         if self._gen_engine is not None:
             self._gen_engine.update_params(self.params)
             # elastic refit: the engine's jitted steps take the plan as a
@@ -271,8 +283,8 @@ class SamplerNode:
                 "dedup_ratio": sub.chunk_hits / total if total else 0.0}
 
 
-def link_telemetry(samplers: List["SamplerNode"],
-                   learner: "LearnerNode") -> List[Dict[str, float]]:
+def link_telemetry(samplers: List[SamplerNode],
+                   learner: LearnerNode) -> List[Dict[str, float]]:
     """Per-sampler weight-transport telemetry (bytes on wire, dedup
     ratio, simulated sync seconds) plus the learner's publish-side stream
     accounting as a pseudo-row (sampler=-1) — the one construction site

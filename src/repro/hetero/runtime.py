@@ -15,19 +15,14 @@ from __future__ import annotations
 
 from typing import Any, Callable, Dict, List, Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
 from repro.checkpoint import PolicyStore
 from repro.config import HeteroConfig, ModelConfig, RLConfig, TrainConfig
 from repro.core.diagnostics import MetricsHistory
-from repro.data import ArithmeticTask, PromptPipeline, Tokenizer, score_rollouts
+from repro.data import ArithmeticTask, PromptPipeline, Tokenizer
 from repro.hetero.events import EventSim, Transport
 from repro.hetero.nodes import (LearnerNode, RolloutBatch, SamplerNode,
                                 link_telemetry)
 from repro.parallel import ExecutionPlan
-from repro.sampling import generate
 from repro.training import TrainState
 
 

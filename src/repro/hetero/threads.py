@@ -13,10 +13,7 @@ from __future__ import annotations
 import queue
 import threading
 import time
-from typing import Any, Callable, List, Optional
-
-import jax
-import numpy as np
+from typing import Optional
 
 from repro.checkpoint import PolicyStore
 from repro.config import HeteroConfig, ModelConfig, RLConfig, TrainConfig
@@ -41,7 +38,7 @@ class ThreadedHeteroRuntime:
         self.store = PolicyStore()
         self.learner = LearnerNode(cfg, rl, tc, hcfg, state, self.store,
                                    plan=learner_plan)
-        self.queue: "queue.Queue[RolloutBatch]" = queue.Queue(queue_size)
+        self.queue: queue.Queue[RolloutBatch] = queue.Queue(queue_size)
         # each sampler owns a plan-placed *copy* of the params (SamplerNode
         # ctor) — the learner thread's donated step never touches them
         self.samplers = [
@@ -94,8 +91,9 @@ class ThreadedHeteroRuntime:
             while self.learner.step < num_learner_steps:
                 try:
                     batch = self.queue.get(timeout=30.0)
-                except queue.Empty:
-                    raise RuntimeError("samplers starved the learner")
+                except queue.Empty as e:
+                    raise RuntimeError(
+                        "samplers starved the learner") from e
                 self.learner.receive(self._now_s(), batch)
                 b = self.learner.pop_eligible(self._now_s())
                 if b is not None:

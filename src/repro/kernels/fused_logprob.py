@@ -249,7 +249,7 @@ def _chunked_fwd_pass(logits, targets, chunk: int):
             jax.lax.slice_in_dim(targets, nc * chunk, t, axis=ax)))
     if len(parts) == 1:
         return parts[0]
-    return tuple(jnp.concatenate(ps, axis=-1) for ps in zip(*parts))
+    return tuple(jnp.concatenate(ps, axis=-1) for ps in zip(*parts, strict=True))
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2,))

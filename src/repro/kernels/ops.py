@@ -10,10 +10,8 @@ import functools
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.fused_logprob import (chunked_logprob as _chunked_logprob,
                                          fused_logprob as _fused_logprob)

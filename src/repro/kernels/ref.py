@@ -2,7 +2,7 @@
 targets of the kernel test sweeps)."""
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -17,7 +17,6 @@ Conventions:
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict
 
 from repro.config import ATTN, CROSS, LOCAL, MAMBA, MLP, MOE, ModelConfig, ShapeConfig

@@ -28,7 +28,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.config import RLConfig, ServeConfig
 from repro.configs import smoke

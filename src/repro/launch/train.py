@@ -38,7 +38,7 @@ from repro.training import init_state, jit_sft_step
 
 def make_eval_fn(cfg, rl, task, tok, n_prompts=32, seed=1234):
     """Pass@1-style eval on held-out problems (greedy-ish sampling)."""
-    from repro.data import PromptPipeline, score_rollouts
+    from repro.data import score_rollouts
     from repro.sampling import generate
     eval_task = ArithmeticTask(max_operand=task.max_operand, ops=task.ops,
                                prompt_width=task.prompt_width, seed=seed)
@@ -61,7 +61,7 @@ def sft_warmstart(cfg, tc, task, tok, state, steps=400, batch=64, seed=0):
     rng = np.random.default_rng(seed)
     step_fn = jit_sft_step(cfg, tc)
     width = task.prompt_width + 8
-    for i in range(steps):
+    for _ in range(steps):
         probs = task.sample_batch(batch)
         rows, masks = [], []
         for p in probs:

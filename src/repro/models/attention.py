@@ -11,7 +11,6 @@ kernel is used on real hardware; this path is the lowering/CPU oracle).
 from __future__ import annotations
 
 import functools
-from functools import partial
 from typing import Optional
 
 import jax

@@ -9,7 +9,6 @@ All functions are pure; parameters come from ``repro.models.params``.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

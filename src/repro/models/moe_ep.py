@@ -24,7 +24,7 @@ FSDP-sharded on d_model vs f) + ``cfg.ep_dp_axes``.
 from __future__ import annotations
 
 import functools
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

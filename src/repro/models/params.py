@@ -194,7 +194,7 @@ def init_params(cfg: ModelConfig, key: jax.Array) -> Any:
                 ).astype(dtype)
 
     return jax.tree_util.tree_unflatten(
-        treedef, [mk(t, k) for t, k in zip(leaves, keys)])
+        treedef, [mk(t, k) for t, k in zip(leaves, keys, strict=True)])
 
 
 def abstract_params(cfg: ModelConfig) -> Any:

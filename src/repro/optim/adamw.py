@@ -4,7 +4,7 @@ configs, where full Adam state does not fit 16 GB/chip HBM; see
 EXPERIMENTS.md §Dry-run memory notes)."""
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple, Tuple
+from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -47,7 +47,7 @@ def adamw_update(tc: TrainConfig, grads: Any, state: AdamWState, params: Any,
     flat_m = tdef.flatten_up_to(state.m)
     flat_v = tdef.flatten_up_to(state.v)
     flat_p = tdef.flatten_up_to(params)
-    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p, strict=True)]
     new_p = tdef.unflatten([o[0] for o in out])
     new_m = tdef.unflatten([o[1] for o in out])
     new_v = tdef.unflatten([o[2] for o in out])
@@ -112,7 +112,7 @@ def adafactor_update(tc: TrainConfig, grads: Any, state: AdafactorState,
     flat_c = tdef.flatten_up_to(state.vc)
     flat_p = tdef.flatten_up_to(params)
     out = [upd(g, r, c, p) for g, r, c, p
-           in zip(flat_g, flat_r, flat_c, flat_p)]
+           in zip(flat_g, flat_r, flat_c, flat_p, strict=True)]
     return (tdef.unflatten([o[0] for o in out]),
             AdafactorState(step=step,
                            vr=tdef.unflatten([o[1] for o in out]),

@@ -176,7 +176,7 @@ def fit_spec(mesh: jax.sharding.Mesh, spec: P, shape: Tuple[int, ...]) -> P:
     shard over model=16; GQA heads then stay partially sharded)."""
     entries = list(spec) + [None] * (len(shape) - len(spec))
     out = []
-    for dim, entry in zip(shape, entries):
+    for dim, entry in zip(shape, entries, strict=True):
         if entry is None:
             out.append(None)
             continue

@@ -354,7 +354,10 @@ class ContinuousEngine:
             jnp.asarray(self._max_new), self.vocab_limit, self.sync_every,
             plan=self.plan)
         sched.stats["decode_steps"] += self.sync_every
-        tok_np, lp_np = np.asarray(toks), np.asarray(lps)
+        # deliberate sync point: the scheduler needs this chunk's tokens
+        # on host for EOS recycling/admission — one sync per sync_every
+        # decode steps, the amortization RA003 exists to protect
+        tok_np, lp_np = np.asarray(toks), np.asarray(lps)  # noqa: RA003
         for r in dec:
             for i in range(self.sync_every):
                 if r.gen_count >= r.max_new:

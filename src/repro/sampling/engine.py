@@ -148,9 +148,12 @@ class StaticEngine:
             self.cfg, self.rl, self.params, prompts, self.key, max_new,
             self.vocab_limit, self.memory, plan=self.plan, rids=rids)
         elapsed = time.perf_counter() - t0
-        comp_np = np.asarray(completions)
-        lp_np = np.asarray(sampler_lp)
-        mask_np = np.asarray(comp_mask)
+        # deliberate sync point: the static engine runs the whole batch to
+        # completion in one executable, so the single batch-end transfer
+        # is the design, not a stall in a loop
+        comp_np = np.asarray(completions)   # noqa: RA003
+        lp_np = np.asarray(sampler_lp)      # noqa: RA003
+        mask_np = np.asarray(comp_mask)     # noqa: RA003
         out: List[GenerationResult] = []
         for i, req in enumerate(requests):
             budget = req.params.max_new_tokens

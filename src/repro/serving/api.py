@@ -72,7 +72,7 @@ class SamplingParams:
 
     @classmethod
     def from_rl(cls, rl: RLConfig,
-                max_new: Optional[int] = None) -> "SamplingParams":
+                max_new: Optional[int] = None) -> SamplingParams:
         return cls(temperature=rl.temperature, top_k=rl.top_k,
                    top_p=rl.top_p,
                    max_new_tokens=max_new or rl.max_new_tokens)

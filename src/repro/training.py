@@ -12,7 +12,6 @@ Batch layout (targets are tokens shifted by one):
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax

@@ -34,7 +34,7 @@ class ChunkRef:
     replicas: int = 1
 
     def slices(self) -> Tuple[slice, ...]:
-        return tuple(slice(s, s + n) for s, n in zip(self.start, self.shape))
+        return tuple(slice(s, s + n) for s, n in zip(self.start, self.shape, strict=True))
 
 
 def content_hash(data: bytes) -> str:
@@ -100,7 +100,7 @@ def chunk_host_leaf(leaf: Any, sharding, regions=None
             if host is None:
                 host = np.asarray(leaf)
             view = host[tuple(slice(s, s + n)
-                              for s, n in zip(start, cshape))]
+                              for s, n in zip(start, cshape, strict=True))]
         data = encode_array(view)
         out.append((ChunkRef(hash=content_hash(data), nbytes=len(data),
                              start=start, shape=cshape, replicas=replicas),
@@ -132,4 +132,5 @@ def overlaps(ref: ChunkRef, start: Tuple[int, ...],
              cshape: Tuple[int, ...]) -> bool:
     """Does chunk ``ref`` intersect the region (start, cshape)?"""
     return all(s0 < s1 + n1 and s1 < s0 + n0
-               for s0, n0, s1, n1 in zip(ref.start, ref.shape, start, cshape))
+               for s0, n0, s1, n1 in zip(ref.start, ref.shape, start, cshape,
+                          strict=True))

@@ -70,11 +70,11 @@ class Manifest:
              "chunks": [[c.hash, c.nbytes, list(c.start), list(c.shape),
                          c.replicas] for c in lm.chunks]}
             for lm in self.leaves]}
-        return json.dumps(doc, separators=(",", ":")).encode("utf-8")
+        return json.dumps(doc, separators=(",", ":")).encode()
 
     @staticmethod
-    def from_json(data: bytes) -> "Manifest":
-        doc = json.loads(data.decode("utf-8"))
+    def from_json(data: bytes) -> Manifest:
+        doc = json.loads(data.decode())
         leaves = tuple(
             LeafManifest(
                 key=ld["key"], dtype=ld["dtype"], shape=tuple(ld["shape"]),

@@ -1,0 +1,250 @@
+"""repro.analysis: rule firing, suppression, baseline workflow, and the
+repo-clean invariant (`python -m repro.analysis src tests benchmarks`
+must pass with the checked-in baseline), plus the dynamic twin of RA002:
+configs that ride `static_argnames` must actually hash.
+"""
+import dataclasses
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.core import (DEFAULT_EXCLUDES, SourceFile,
+                                 apply_baseline, collect_files,
+                                 load_baseline, run_analysis, run_rules,
+                                 save_baseline)
+from repro.analysis.rules import RULE_DOCS, default_rules
+
+REPO = Path(__file__).resolve().parent.parent
+FIXTURE = (REPO / "src" / "repro" / "analysis" / "_fixtures"
+           / "known_bad.py")
+
+
+def _analyze_source(src: str, name: str = "mod.py"):
+    f = SourceFile(Path(name), name, textwrap.dedent(src))
+    return run_rules([f])
+
+
+class TestRuleFiring:
+    def test_all_rules_fire_on_fixture(self):
+        files = collect_files([FIXTURE], root=FIXTURE.parent, excludes=())
+        findings = run_rules(files)
+        assert {f.rule for f in findings} == set(RULE_DOCS)
+
+    def test_fixture_excluded_from_normal_runs(self):
+        files = collect_files([FIXTURE.parent.parent], root=REPO)
+        assert all("_fixtures" not in f.rel for f in files)
+        assert "_fixtures" in DEFAULT_EXCLUDES
+
+    def test_ra001_rebind_is_clean(self):
+        findings = _analyze_source("""
+            import functools, jax
+
+            @functools.partial(jax.jit, donate_argnums=(0,))
+            def step(state, batch):
+                return state
+
+            def ok(state, batch):
+                state = step(state, batch)      # rebind: donation is fine
+                return state["params"]
+        """)
+        assert [f for f in findings if f.rule == "RA001"] == []
+
+    def test_ra001_read_after_donation_fires(self):
+        findings = _analyze_source("""
+            import functools, jax
+
+            @functools.partial(jax.jit, donate_argnums=(0,))
+            def step(state, batch):
+                return state
+
+            def bad(state, batch):
+                new = step(state, batch)
+                return state["params"], new     # read of donated buffer
+        """)
+        assert [f.rule for f in findings] == ["RA001"]
+
+    def test_ra002_frozen_dataclass_static_is_clean(self):
+        findings = _analyze_source("""
+            import dataclasses, functools, jax
+
+            @dataclasses.dataclass(frozen=True)
+            class Cfg:
+                n: int = 1
+
+            @functools.partial(jax.jit, static_argnames=("cfg",))
+            def fwd(cfg: Cfg, x):
+                return x
+        """)
+        assert findings == []
+
+    def test_ra002_plain_dataclass_static_fires(self):
+        findings = _analyze_source("""
+            import dataclasses, functools, jax
+
+            @dataclasses.dataclass
+            class Cfg:
+                n: int = 1
+
+            @functools.partial(jax.jit, static_argnames=("cfg",))
+            def fwd(cfg: Cfg, x):
+                return x
+        """)
+        assert [f.rule for f in findings] == ["RA002"]
+        assert "non-frozen dataclass" in findings[0].message
+
+    def test_ra002_lru_cached_builder_is_clean(self):
+        findings = _analyze_source("""
+            import functools, jax
+
+            @functools.lru_cache(maxsize=8)
+            def build(n):
+                def step(x):
+                    return x * n
+                return jax.jit(step)
+        """)
+        assert findings == []
+
+    def test_ra003_sync_outside_hot_path_is_clean(self):
+        findings = _analyze_source("""
+            import jax
+            import numpy as np
+
+            @jax.jit
+            def fwd(x):
+                return x
+
+            def report(x):                      # not a hot-path name
+                y = fwd(x)
+                return float(y)
+        """)
+        assert findings == []
+
+    def test_ra005_locked_mutation_is_clean(self):
+        findings = _analyze_source("""
+            import threading
+
+            class Shared:
+                def __init__(self):
+                    self.n = 0
+                    self._lock = threading.Lock()
+
+                def bump(self):
+                    with self._lock:
+                        self.n += 1
+
+                def run(self):
+                    threading.Thread(target=self.bump).start()
+        """)
+        assert findings == []
+
+
+class TestSuppressionAndBaseline:
+    BAD = """
+        import jax
+        import numpy as np
+
+        @jax.jit
+        def fwd(x):
+            return x
+
+        def step(x):
+            y = fwd(x)
+            return float(y){noqa}
+    """
+
+    def test_noqa_suppresses_exact_rule(self):
+        assert _analyze_source(self.BAD.format(noqa="")) != []
+        assert _analyze_source(
+            self.BAD.format(noqa="  # noqa: RA003")) == []
+        assert _analyze_source(self.BAD.format(noqa="  # noqa")) == []
+        # a different code does not suppress
+        assert _analyze_source(
+            self.BAD.format(noqa="  # noqa: RA001")) != []
+
+    def test_baseline_roundtrip_and_staleness(self, tmp_path):
+        findings = _analyze_source(self.BAD.format(noqa=""))
+        assert findings
+        bl_path = tmp_path / "baseline.json"
+        save_baseline(bl_path, findings)
+        baseline = load_baseline(bl_path)
+        assert json.loads(bl_path.read_text())["version"] == 1
+
+        new, stale = apply_baseline(findings, baseline)
+        assert new == [] and stale == []
+
+        # key is content-addressed: the same finding on a shifted line
+        # is still baselined
+        shifted = _analyze_source("\n\n" + textwrap.dedent(
+            self.BAD.format(noqa="")))
+        new, stale = apply_baseline(shifted, baseline)
+        assert new == []
+
+        # fixing the finding leaves a stale entry (prompt to re-baseline)
+        new, stale = apply_baseline([], baseline)
+        assert new == [] and len(stale) == len({f.key for f in findings})
+
+
+class TestRepoIsClean:
+    def test_repo_analysis_clean_with_checked_in_baseline(self):
+        new, stale, _total = run_analysis(
+            [REPO / "src", REPO / "tests", REPO / "benchmarks"],
+            root=REPO, baseline_path=REPO / "analysis_baseline.json")
+        assert new == [], "new analysis findings:\n" + "\n".join(
+            f.render() for f in new)
+        assert stale == [], f"stale baseline entries: {stale}"
+
+    def test_cli_selftest_passes(self):
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.analysis", "--selftest"],
+            cwd=REPO, capture_output=True, text=True,
+            env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"})
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+        assert "selftest OK" in proc.stdout
+
+
+class TestConfigHashability:
+    """RA002's dynamic twin: every config that rides ``static_argnames``
+    (and every field it carries) must be hashable, or the first jit call
+    with it dies — catch the next list-typed field at test time."""
+
+    def _configs(self):
+        from repro.config import (ATTN, MLP, HeteroConfig, ModelConfig,
+                                  RLConfig, ServeConfig, TrainConfig)
+        model = ModelConfig(name="t", family="dense", num_layers=1,
+                            d_model=8, num_heads=2, num_kv_heads=1,
+                            d_ff=16, vocab_size=8, block_pattern=(ATTN,),
+                            ffn_pattern=(MLP,))
+        return [model, RLConfig(), TrainConfig(), HeteroConfig(),
+                ServeConfig()]
+
+    def test_default_instances_hash(self):
+        for cfg in self._configs():
+            hash(cfg)  # raises TypeError on any unhashable field value
+
+    def test_every_field_value_hashable(self):
+        for cfg in self._configs():
+            for f in dataclasses.fields(cfg):
+                v = getattr(cfg, f.name)
+                try:
+                    hash(v)
+                except TypeError:
+                    pytest.fail(
+                        f"{type(cfg).__name__}.{f.name} = {v!r} is "
+                        "unhashable — it would break every jit that "
+                        "takes the config as a static arg")
+
+    def test_configs_are_frozen(self):
+        for cfg in self._configs():
+            with pytest.raises(dataclasses.FrozenInstanceError):
+                object.__getattribute__(cfg, "__class__")  # appease lint
+                setattr(cfg, dataclasses.fields(cfg)[0].name, None)
+
+    def test_execution_plan_hashes(self):
+        from repro.parallel import plan_from_flag
+        plan = plan_from_flag(None, "serve")
+        hash(plan)
+        assert plan == plan_from_flag(None, "serve")

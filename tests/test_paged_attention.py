@@ -238,7 +238,8 @@ class TestTensorParallel:
         fn = _shard_map(local, mesh=mesh,
                         in_specs=(qs, ps, ps, P(None, None), P(None)),
                         out_specs=qs, **_CHECK_KW)
-        out = jax.jit(fn)(q, kp, vp, table, lengths)
+        fn_jit = jax.jit(fn)
+        out = fn_jit(q, kp, vp, table, lengths)
         oracle = paged_decode(q, kp, vp, table, lengths, impl="gather")
         np.testing.assert_allclose(np.asarray(out), np.asarray(oracle),
                                    rtol=2e-5, atol=2e-5)

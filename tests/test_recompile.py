@@ -1,0 +1,96 @@
+"""Recompile sentinel: the dynamic half of RA002.
+
+Locks in PR-5's "O(log) executables" claim: the continuous engine's
+pow2-bucketed block-table narrowing means a mixed-length workload
+compiles at most `phases x pow2_bucket_count(pages_per_slot)` jitted
+chunk executables (plus a bounded set of eager scatter/convert ops), and
+a *steady* run — same shapes again — compiles exactly nothing.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.analysis.sentinel import (RecompileSentinel, executable_bound,
+                                     pow2_bucket_count)
+from repro.config import ATTN, MLP, ModelConfig, RLConfig
+from repro.models import init_params
+from repro.sampling import ContinuousEngine
+from repro.serving.api import Request, SamplingParams
+
+TINY = ModelConfig(name="tiny", family="dense", num_layers=2, d_model=64,
+                   num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=32,
+                   block_pattern=(ATTN,), ffn_pattern=(MLP,),
+                   dtype="float32", attn_impl="naive", remat=False,
+                   rope_theta=1e4)
+
+NUM_SLOTS = 4
+PREFILL_CHUNK = 4
+# (prompt_len, max_new) mix spanning 1..5 pages of a page_size=4 pool —
+# hits several pow2 width buckets in both prefill and decode
+WORKLOAD = [(3, 4), (7, 8), (12, 6), (5, 8), (20, 8), (9, 3), (15, 8),
+            (4, 8)]
+
+
+def _engine():
+    rl = RLConfig(temperature=1.0, top_k=0, top_p=1.0, max_new_tokens=8)
+    params = init_params(TINY, jax.random.PRNGKey(0))
+    eng = ContinuousEngine(TINY, params, rl=rl, max_total_tokens=32,
+                           num_slots=NUM_SLOTS, page_size=4, sync_every=2,
+                           prefill_chunk=PREFILL_CHUNK, vocab_limit=20,
+                           prefix_cache=False, key=jax.random.PRNGKey(1))
+    return eng, rl
+
+
+def _epoch(eng, rl, rid0):
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=rid0 + i, prompt=rng.integers(3, 20, size=plen),
+                    params=SamplingParams.from_rl(rl, max_new=mnew))
+            for i, (plen, mnew) in enumerate(WORKLOAD)]
+    return eng.generate(reqs, key=jax.random.PRNGKey(2))
+
+
+class TestPow2BucketCount:
+    def test_matches_live_width_enumeration(self):
+        from repro.sampling.continuous import _live_width
+        for cap in (1, 2, 3, 7, 8, 16, 100):
+            widths = {_live_width(n, cap) for n in range(1, cap + 1)}
+            assert pow2_bucket_count(cap) == len(widths)
+
+    def test_log_growth(self):
+        # the whole point: buckets grow like log2(pool), not pool
+        assert pow2_bucket_count(8) == 4
+        assert pow2_bucket_count(1024) == 11
+        assert executable_bound(1024, phases=2, slack=0) == 22
+
+
+class TestEngineExecutableBound:
+    def test_mixed_lengths_bucketed_then_steady_zero(self):
+        eng, rl = _engine()
+        buckets = pow2_bucket_count(eng.pages_per_slot)
+        # cold bound: one executable per (phase, width bucket) for the
+        # two jitted chunk families (prefill, decode), plus the eager
+        # per-(slot, chunk-offset) last-logits scatter and a handful of
+        # one-off convert/fill ops
+        eager_slack = NUM_SLOTS * PREFILL_CHUNK + 8
+        bound = 2 * buckets + eager_slack
+        with RecompileSentinel("cold") as cold:
+            r1 = _epoch(eng, rl, rid0=0)
+        assert cold.compiles > 0          # the sentinel actually counts
+        cold.assert_bound(bound, "cold mixed-length epoch")
+
+        # steady state: identical shape distribution, different rids and
+        # page assignments — every executable must be a cache hit
+        with RecompileSentinel("steady") as steady:
+            r2 = _epoch(eng, rl, rid0=100)
+        steady.assert_bound(0, "steady-state epoch")
+
+        # both epochs did real work (rid seeds the RNG stream, so token
+        # counts differ — but every request must have finished)
+        assert len(r1) == len(WORKLOAD) and len(r2) == len(WORKLOAD)
+        assert all(len(r.tokens) >= 1 for r in r1 + r2)
+
+    def test_assert_bound_raises(self):
+        s = RecompileSentinel("x")
+        s.compiles = 3
+        with pytest.raises(AssertionError, match="3 XLA compiles"):
+            s.assert_bound(2)
