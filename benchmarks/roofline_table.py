@@ -36,6 +36,42 @@ def paged_decode_rows() -> list:
     return rows
 
 
+def paged_prefill_rows() -> list:
+    """Bytes-per-chunk model of chunked-prefill admission: the gather
+    path materializes the narrowed table's dense view — the pow2 width
+    bucket for ``pages_for(c0 + C)`` — per layer per chunk, while the
+    in-place kernel streams exactly the reachable pages. The gap is the
+    pow2 rounding (≤2x) *plus* the materialization itself: gather pays
+    its bytes twice (read pool, write view, read view), the kernel
+    once. Measured twin: the prefill sweep in
+    ``benchmarks/decode_bench.py``."""
+    from repro.config import DECODE_32K
+    from repro.configs import get_config
+
+    cfg = get_config("qwen2-7b")
+    page_size = 16
+    chunk = 512
+    pool_len = DECODE_32K.seq_len
+    pool_pages = pool_len // page_size
+    kv_bytes = 2 * cfg.num_kv_heads * cfg.head_dim * 2      # k+v, bf16
+    rows = ["roofline,paged-prefill,arch,c0,chunk,pool,"
+            "kv_GiB_per_chunk_gather,kv_GiB_per_chunk_kernel,ratio"]
+    for c0 in (2048, 8192, pool_len - chunk):
+        live_pages = -(-(c0 + chunk) // page_size)
+        width = 1
+        while width < live_pages:
+            width *= 2
+        width = min(width, pool_pages)
+        # dense view: read the pages + write/read the materialized copy
+        gather = cfg.num_layers * 2 * width * page_size * kv_bytes
+        kernel = cfg.num_layers * live_pages * page_size * kv_bytes
+        rows.append(
+            f"roofline,paged-prefill,{cfg.name},{c0},{chunk},{pool_len},"
+            f"{gather/2**30:.3f},{kernel/2**30:.3f},"
+            f"{gather/kernel:.1f}x")
+    return rows
+
+
 def run() -> list:
     files = sorted(glob.glob(os.path.join(RESULTS, "*.json")))
     rows = ["roofline,arch,shape,mesh,compute_ms,memory_ms,collective_ms,"
@@ -43,7 +79,7 @@ def run() -> list:
     if not files:
         rows.append("roofline,NO_RESULTS,run `python -m repro.launch."
                     "dryrun` first,,,,,,,,,")
-        return rows + paged_decode_rows()
+        return rows + paged_decode_rows() + paged_prefill_rows()
     for fn in files:
         with open(fn) as f:
             r = json.load(f)
@@ -57,4 +93,4 @@ def run() -> list:
             f"{r.get('entry_arg_bytes_per_dev', 0)/2**30:.2f},"
             f"{ma.get('temp_size_in_bytes', 0)/2**30:.2f},"
             f"{r.get('hbm_fit_16g')}")
-    return rows + paged_decode_rows()
+    return rows + paged_decode_rows() + paged_prefill_rows()

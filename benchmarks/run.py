@@ -41,8 +41,10 @@ MODULES = [
 # its workers are subprocesses, so the forced device count never leaks;
 # "sync" asserts the chunked weight transport beats whole-blob sync and
 # stays byte-identical — its mesh part subprocesses when devices < 4;
-# "decode" A/Bs the paged-decode hot loop (gather-legacy vs in-place
-# kernel/ref) on the temp-bytes proxy and emits BENCH_decode.json);
+# "decode" A/Bs the paged-attention hot loops — decode steps and
+# chunked-prefill chunks, plus the fused multi-layer launch —
+# (gather-legacy vs in-place kernel/ref) on the temp-bytes proxy and
+# emits BENCH_decode.json);
 # "serve_lat" drives the admission-controlled front door under Poisson/
 # bursty/overload open-loop load and emits BENCH_serve.json;
 # "sentinel" asserts the engine's pow2-bucketed executable bound under

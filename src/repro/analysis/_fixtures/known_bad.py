@@ -80,6 +80,29 @@ def ra004_misaligned_call(x):
     )(x)
 
 
+def ra004_prefetch_map_drops_refs(x, table):
+    from jax.experimental.pallas import tpu as pltpu
+
+    def imap_no_refs(i, j):                   # RA004: drops 1 prefetch ref
+        return (i, j)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(4, 2),
+        in_specs=[
+            # RA004: index map takes 2 params, grid rank 2 + 1 prefetch
+            # RA004: literal 100 on the q-chunk axis is not 8-aligned
+            pl.BlockSpec((1, 100, 8, 128), imap_no_refs),
+        ],
+        out_specs=pl.BlockSpec((8, 128), lambda i, j, tbl: (i, 0)),  # ok
+    )
+    return pl.pallas_call(
+        bad_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(table, x)
+
+
 # --- RA005: unlocked cross-thread mutation ------------------------------
 
 class SharedCounter:
@@ -106,4 +129,4 @@ class SharedCounter:
 
 _ = (jnp, ra001_read_after_donate, ra002_unhashable_static,
      ra002_jit_in_loop, decode_ra002_hot, step, ra004_misaligned_call,
-     SharedCounter)
+     ra004_prefetch_map_drops_refs, SharedCounter)

@@ -430,6 +430,7 @@ class PallasKernelConstraints(Rule):
         if "pallas" not in f.source:
             return
         yield from self._check_blockspecs(f)
+        yield from self._check_prefetch_grid_specs(f)
         for kfn in self._kernel_functions(f):
             yield from self._check_kernel_body(f, kfn)
 
@@ -459,6 +460,82 @@ class PallasKernelConstraints(Rule):
                             f"position is not {mult}-aligned (and not 1) "
                             "— Mosaic pads or rejects it; derive the "
                             "tile via the `_fit_block` idiom")
+
+    # ---- PrefetchScalarGridSpec contract --------------------------------
+    # The paged kernels prefetch the block table + per-slot scalars so
+    # BlockSpec index maps can resolve logical→physical pages in place.
+    # Pallas appends every scalar-prefetch operand to each index_map call
+    # (after the grid indices), so a map whose arity is not
+    # grid_rank + num_scalar_prefetch silently drops (or worse, shifts)
+    # the prefetch refs. Literal >1 tile dims above the sublane/lane pair
+    # (the q-chunk axis of the prefill kernel) must be 8-aligned — they
+    # flatten into the MXU row count; derive them via `_fit_block`.
+    def _check_prefetch_grid_specs(self, f: SourceFile) -> Iterator[Finding]:
+        for node in ast.walk(f.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            last = (spelling(node.func) or "").split(".")[-1]
+            if last != "PrefetchScalarGridSpec":
+                continue
+            npf_node = keyword_value(node, "num_scalar_prefetch")
+            if npf_node is None and node.args:
+                npf_node = node.args[0]
+            if not (isinstance(npf_node, ast.Constant)
+                    and isinstance(npf_node.value, int)):
+                continue
+            npf = npf_node.value
+            grid = keyword_value(node, "grid")
+            grid_rank = (len(grid.elts)
+                         if isinstance(grid, (ast.Tuple, ast.List)) else None)
+            scope = enclosing_function(node)
+            for bs in ast.walk(node):
+                if not (isinstance(bs, ast.Call)
+                        and (spelling(bs.func) or "").split(".")[-1]
+                        == "BlockSpec"):
+                    continue
+                imap = bs.args[1] if len(bs.args) > 1 \
+                    else keyword_value(bs, "index_map")
+                arity = self._index_map_arity(imap, scope)
+                if arity is not None and grid_rank is not None \
+                        and arity != grid_rank + npf:
+                    yield f.finding(
+                        self.code, bs,
+                        f"BlockSpec index map takes {arity} params but "
+                        f"this PrefetchScalarGridSpec calls it with "
+                        f"{grid_rank} grid indices + {npf} scalar-prefetch "
+                        "refs — prefetch operands are appended to every "
+                        "index_map call, so the map must consume them")
+                shape = bs.args[0] if bs.args else None
+                if isinstance(shape, (ast.Tuple, ast.List)):
+                    for el in shape.elts[:-2]:
+                        if isinstance(el, ast.Constant) \
+                                and isinstance(el.value, int) \
+                                and el.value != 1 and el.value % 8 != 0:
+                            yield f.finding(
+                                self.code, el,
+                                f"BlockSpec tile dim {el.value} on a "
+                                "q-chunk (pre-sublane) axis of a "
+                                "scalar-prefetch kernel is not 8-aligned "
+                                "(and not 1) — it flattens into the MXU "
+                                "row count; derive it via the `_fit_block` "
+                                "idiom")
+
+    @staticmethod
+    def _index_map_arity(imap: Optional[ast.AST],
+                         scope: Optional[ast.AST]) -> Optional[int]:
+        """Parameter count of an index_map expression: a literal lambda,
+        or a name resolved to a single FunctionDef in the enclosing
+        function's body (ambiguous / non-local names are skipped)."""
+        if isinstance(imap, ast.Lambda):
+            return len(imap.args.posonlyargs) + len(imap.args.args)
+        name = spelling(imap) if imap is not None else None
+        if not name or "." in name or scope is None:
+            return None
+        defs = [n for n in ast.walk(scope)
+                if isinstance(n, ast.FunctionDef) and n.name == name]
+        if len(defs) != 1:
+            return None
+        return len(all_params(defs[0]))
 
     # ---- kernel bodies --------------------------------------------------
     def _kernel_functions(self, f: SourceFile) -> List[ast.FunctionDef]:

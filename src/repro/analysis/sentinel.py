@@ -109,4 +109,19 @@ def executable_bound(max_pages: int, phases: int = 3, slack: int = 4) -> int:
     return phases * pow2_bucket_count(max_pages) + slack
 
 
-__all__ = ["RecompileSentinel", "pow2_bucket_count", "executable_bound"]
+def prefill_executable_bound(prefill_chunk: int, max_pages: int) -> int:
+    """Analytic ceiling on jitted prefill-chunk executables
+    (``_prefill_chunk_jit``): each compile is keyed by
+    (chunk width, pow2 block-table width bucket). Chunk widths are the
+    configured ``prefill_chunk`` plus every shorter final tail a prompt
+    can leave — at most ``prefill_chunk`` distinct values; table widths
+    bucket through ``_live_width`` exactly as decode's do. Pass the
+    engine's ``prefill_chunk`` (``None``/0 — whole-prompt prefill —
+    degenerates to one width per distinct prompt length; this bound
+    covers the chunked configuration the engine runs in production).
+    """
+    return (prefill_chunk or 1) * pow2_bucket_count(max_pages)
+
+
+__all__ = ["RecompileSentinel", "pow2_bucket_count", "executable_bound",
+           "prefill_executable_bound"]

@@ -10,13 +10,17 @@ import functools
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.fused_logprob import (chunked_logprob as _chunked_logprob,
                                          fused_logprob as _fused_logprob)
 from repro.kernels.paged_attention import (paged_attention as _paged,
-                                           paged_decode_ref as _paged_ref)
+                                           paged_decode_ref as _paged_ref,
+                                           paged_prefill as _paged_prefill,
+                                           paged_prefill_ref as
+                                           _paged_prefill_ref)
 from repro.kernels.ssd_scan import ssd_scan as _ssd_scan
 
 
@@ -96,6 +100,148 @@ def paged_decode(q, kp, vp, page_table, lengths, *, kind: str = "causal",
         o = _paged(q[:, 0], kp, vp, page_table, lengths,
                    window=eff_window, softcap=softcap, interpret=interp)
     return o[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "window", "softcap",
+                                             "impl", "attn_impl", "chunk",
+                                             "interpret"))
+def paged_prefill(q, kp, vp, page_table, positions, *, kind: str = "causal",
+                  window: Optional[int] = None,
+                  softcap: Optional[float] = None,
+                  impl: Optional[str] = None, attn_impl: str = "chunked",
+                  chunk: int = 512, interpret: Optional[bool] = None):
+    """Chunked-prefill attention against paged KV pools — long-prompt
+    admission's hot loop.
+
+    q (B, C, Hq, D) one C-token query chunk per slot; kp/vp
+    (num_pages, page_size, Hkv, D) page pools (the chunk's k/v already
+    scattered in); page_table (B, npages); positions (B, C) absolute
+    query positions, ``starts[slot] + arange(C)`` — contiguous per slot.
+    Returns (B, C, Hq, D).
+
+    ``impl`` selects the backend (``ModelConfig.paged_attn_impl``):
+      - "gather" (the ModelConfig default): materialize the logical
+        (B, npages·page_size, Hkv, D) view and run dense ``attention``
+        over it — bit-identical to the pre-kernel chunked-prefill branch
+        of ``models/model.py`` (the static ≡ continuous parity
+        contract), O(table width) bytes/chunk. ``attn_impl``/``chunk``
+        feed through to that dense attention (the flash kernel assumes
+        pos_q = arange(Sq), so "pallas" downgrades to "chunked").
+      - "ref": ``paged_prefill_ref`` — per-page online softmax, no dense
+        view, bytes scale with the batch-max live page count.
+      - "pallas": the Mosaic kernel; unreachable pages re-point in the
+        index map, so bytes scale with ``pages_for(starts + C)``. Like
+        ``paged_decode``, wrap in shard_map to split kv heads on a mesh.
+      - None / "auto": pallas on TPU, ref elsewhere.
+    """
+    if impl not in PAGED_IMPLS + (None,):
+        raise ValueError(f"unknown paged-attention impl {impl!r}")
+    if impl in (None, "auto"):
+        impl = "pallas" if on_tpu() else "ref"
+    if kind not in ("causal", "local"):
+        raise ValueError(f"paged prefill is causal-only, got kind={kind!r}")
+    eff_window = window if kind == "local" else None
+    if impl == "gather":
+        from repro.models.attention import attention
+        b = q.shape[0]
+        npages, page_size = page_table.shape[1], kp.shape[1]
+        lview = npages * page_size
+        kv_shape = (b, lview, kp.shape[2], kp.shape[3])
+        kc = kp[page_table].reshape(kv_shape)             # slot's logical view
+        vc = vp[page_table].reshape(kv_shape)
+        pos_k = jnp.broadcast_to(jnp.arange(lview), (b, lview))
+        # the Pallas flash kernel assumes pos_q = arange(Sq): chunked
+        # prefill runs at an offset, so it drops to the jnp twin
+        a_impl = "chunked" if attn_impl == "pallas" else attn_impl
+        return attention(q, kc, vc, pos_q=positions, pos_k=pos_k,
+                         kind=kind, window=window, softcap=softcap,
+                         impl=a_impl, chunk=chunk)
+    starts = positions[:, 0].astype(jnp.int32)
+    lengths = (positions[:, -1] + 1).astype(jnp.int32)
+    if impl == "ref":
+        return _paged_prefill_ref(q, kp, vp, page_table, lengths, starts,
+                                  window=eff_window, softcap=softcap)
+    interp = (not on_tpu()) if interpret is None else interpret
+    return _paged_prefill(q, kp, vp, page_table, lengths, starts,
+                          window=eff_window, softcap=softcap,
+                          interpret=interp)
+
+
+def _fold_layers(q, kp, vp, page_table, lengths):
+    """Fold a leading layer axis into the slot axis so ONE kernel launch
+    serves every layer's pools.
+
+    q (L, B, ...), kp/vp (L, P, page, Hkv, D), page_table (B, W),
+    lengths (B,) → per-layer operands stacked along slots: the pools
+    concatenate to (L·P, ...), and layer l's table rows offset by l·P so
+    they index the l-th pool slab. Slots never mix across grid steps, so
+    the folded launch is bit-exact vs L per-layer launches — it just
+    amortizes one grid setup and one scalar-prefetch DMA over all
+    layers instead of paying them L times.
+    """
+    lyr, pool_pages = q.shape[0], kp.shape[1]
+    b = q.shape[1]
+    kpf = kp.reshape((lyr * pool_pages,) + kp.shape[2:])
+    vpf = vp.reshape((lyr * pool_pages,) + vp.shape[2:])
+    offs = (jnp.arange(lyr, dtype=jnp.int32) * pool_pages)[:, None, None]
+    tablef = (page_table.astype(jnp.int32)[None] + offs).reshape(lyr * b, -1)
+    lengthsf = jnp.broadcast_to(lengths, (lyr,) + lengths.shape
+                                ).reshape(lyr * b)
+    qf = q.reshape((lyr * b,) + q.shape[2:])
+    return qf, kpf, vpf, tablef, lengthsf
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "window", "softcap",
+                                             "impl", "interpret"))
+def paged_decode_layers(q, kp, vp, page_table, lengths, *,
+                        kind: str = "causal", window: Optional[int] = None,
+                        softcap: Optional[float] = None,
+                        impl: Optional[str] = None,
+                        interpret: Optional[bool] = None):
+    """``paged_decode`` over all layers' pools in ONE launch.
+
+    q (L, B, 1, Hq, D) per-layer queries; kp/vp (L, P, page, Hkv, D)
+    stacked pools (the scanned-block layout of ``init_paged_cache``);
+    page_table (B, W) and lengths (B,) shared by every layer. Returns
+    (L, B, 1, Hq, D), bit-exact vs L separate ``paged_decode`` calls.
+
+    Inside the model's forward pass layer l's *query* depends on layer
+    l-1's output, so the block scan cannot use this; it serves callers
+    that already hold all layers' queries (speculative scoring, KV-pool
+    maintenance sweeps) and pins the launch-count/bit-exactness claim
+    the benchmarks measure.
+    """
+    lyr, b = q.shape[0], q.shape[1]
+    qf, kpf, vpf, tablef, lengthsf = _fold_layers(q, kp, vp, page_table,
+                                                  lengths)
+    o = paged_decode(qf, kpf, vpf, tablef, lengthsf, kind=kind,
+                     window=window, softcap=softcap, impl=impl,
+                     interpret=interpret)
+    return o.reshape((lyr, b) + o.shape[1:])
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "window", "softcap",
+                                             "impl", "attn_impl", "chunk",
+                                             "interpret"))
+def paged_prefill_layers(q, kp, vp, page_table, positions, *,
+                         kind: str = "causal", window: Optional[int] = None,
+                         softcap: Optional[float] = None,
+                         impl: Optional[str] = None,
+                         attn_impl: str = "chunked", chunk: int = 512,
+                         interpret: Optional[bool] = None):
+    """``paged_prefill`` over all layers' pools in ONE launch: q
+    (L, B, C, Hq, D), kp/vp (L, P, page, Hkv, D), positions (B, C)
+    shared across layers. Returns (L, B, C, Hq, D), bit-exact vs L
+    separate calls — same layer-folding as ``paged_decode_layers``."""
+    lyr, b = q.shape[0], q.shape[1]
+    lengths = (positions[:, -1] + 1).astype(jnp.int32)
+    qf, kpf, vpf, tablef, _ = _fold_layers(q, kp, vp, page_table, lengths)
+    posf = jnp.broadcast_to(positions, (lyr,) + positions.shape
+                            ).reshape((lyr * b,) + positions.shape[1:])
+    o = paged_prefill(qf, kpf, vpf, tablef, posf, kind=kind, window=window,
+                      softcap=softcap, impl=impl, attn_impl=attn_impl,
+                      chunk=chunk, interpret=interpret)
+    return o.reshape((lyr, b) + o.shape[1:])
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))

@@ -90,21 +90,18 @@ def _self_attn(cfg: ModelConfig, p: Dict, x: jax.Array, *, kind: str,
                              softcap=cfg.attn_softcap,
                              impl=cfg.paged_attn_impl)
         else:                                             # chunked prefill
-            # gather only the pages the (narrowed) table reaches — the
-            # engine slices it to the chunk's max position
-            pages_per_slot = page_table.shape[1]
-            lview = pages_per_slot * page_size
-            kv_shape = (b, lview, cfg.num_kv_heads, cfg.head_dim)
-            kc = kp[page_table].reshape(kv_shape)         # slot's logical view
-            vc = vp[page_table].reshape(kv_shape)
-            pos_k = jnp.broadcast_to(jnp.arange(lview), (b, lview))
-            # the Pallas flash kernel assumes pos_q = arange(Sq): chunked
-            # prefill runs at an offset, so it drops to the jnp twin
-            impl = "chunked" if cfg.attn_impl == "pallas" else cfg.attn_impl
-            o = attn_mod.attention(q, kc, vc, pos_q=positions, pos_k=pos_k,
-                                   kind=mask_kind, window=cfg.sliding_window,
-                                   softcap=cfg.attn_softcap,
-                                   impl=impl, chunk=cfg.attn_chunk)
+            # attend the pools in place (ref/pallas) or via the dense
+            # per-slot gather (the bit-exact ModelConfig default) —
+            # repro.kernels.ops.paged_prefill. The engine narrows
+            # page_table to pages_for(c0 + C), so the gather view is
+            # bounded by the chunk's pow2 width bucket; the kernel/ref
+            # paths never materialize it at all.
+            from repro.kernels.ops import paged_prefill
+            o = paged_prefill(q, kp, vp, page_table, positions,
+                              kind=mask_kind, window=cfg.sliding_window,
+                              softcap=cfg.attn_softcap,
+                              impl=cfg.paged_attn_impl,
+                              attn_impl=cfg.attn_impl, chunk=cfg.attn_chunk)
         return o.reshape(b, sq, -1) @ p["wo"], {"kp": kp, "vp": vp}
 
     ring = (cfg.local_ring_kv and kind == LOCAL)

@@ -141,6 +141,21 @@ def _live_width(need_pages: int, cap: int) -> int:
     return min(w, cap)
 
 
+def clamp_prefill_chunk(prefill_chunk: Optional[int],
+                        limit: int) -> Optional[int]:
+    """Clamp a configured prefill chunk width to ``limit`` tokens.
+
+    None/0 ("prefill everything in one chunk") stays None; a configured
+    width never exceeds what there is to prefill. The single definition
+    of a fallback that ``ContinuousEngine.step`` (per-request remaining
+    tokens) and ``generate_continuous`` (prompt width) used to each
+    encode on their own.
+    """
+    if not prefill_chunk:
+        return None
+    return min(prefill_chunk, limit)
+
+
 class ContinuousEngine:
     """Persistent continuous-batching engine over one model + page pool.
 
@@ -297,8 +312,8 @@ class ContinuousEngine:
                      if r is not None and r.state == PREFILL]:
             c0 = pref.prefill_pos
             remaining = pref.prompt_len - c0
-            cw = min(self.prefill_chunk or remaining, remaining) \
-                if self.prefill_chunk else remaining
+            cw = clamp_prefill_chunk(self.prefill_chunk,
+                                     remaining) or remaining
             chunk = pref.prompt[c0:c0 + cw]
             if chunk.shape[0] < cw:                 # pad to fixed shape
                 chunk = np.concatenate(
@@ -470,7 +485,7 @@ def generate_continuous(cfg: ModelConfig, rl: RLConfig, params,
     engine = ContinuousEngine(
         cfg, params, rl=rl, max_total_tokens=tp + max_new,
         num_slots=num_slots, page_size=page_size, sync_every=sync_every,
-        prefill_chunk=min(tp, prefill_chunk) if prefill_chunk else None,
+        prefill_chunk=clamp_prefill_chunk(prefill_chunk, tp),
         vocab_limit=vocab_limit, plan=plan, prefix_cache=prefix_cache,
         key=key)
     sp = SamplingParams(temperature=rl.temperature, top_k=rl.top_k,

@@ -123,6 +123,45 @@ class TestRuleFiring:
         """)
         assert findings == []
 
+    PREFETCH = """
+        import jax
+        from jax.experimental import pallas as pl
+        from jax.experimental.pallas import tpu as pltpu
+
+        def kern(tbl_ref, x_ref, o_ref):
+            o_ref[...] = x_ref[...]
+
+        def call(x, table, bq):
+            def imap({params}):
+                return (i, j)
+
+            spec = pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=1,
+                grid=(4, 2),
+                in_specs=[pl.BlockSpec(({dim}, 8, 128), imap)],
+                out_specs=pl.BlockSpec((8, 128), lambda i, j, t: (i, 0)),
+            )
+            return pl.pallas_call(kern, grid_spec=spec,
+                                  out_shape=x)(table, x)
+    """
+
+    def test_ra004_prefetch_contract_clean(self):
+        findings = _analyze_source(
+            self.PREFETCH.format(params="i, j, tbl", dim="bq"))
+        assert [f.rule for f in findings] == []
+
+    def test_ra004_prefetch_map_wrong_arity_fires(self):
+        findings = _analyze_source(
+            self.PREFETCH.format(params="i, j", dim="bq"))
+        assert [f.rule for f in findings] == ["RA004"]
+        assert "scalar-prefetch" in findings[0].message
+
+    def test_ra004_prefetch_qchunk_misaligned_fires(self):
+        findings = _analyze_source(
+            self.PREFETCH.format(params="i, j, tbl", dim="12"))
+        assert [f.rule for f in findings] == ["RA004"]
+        assert "q-chunk" in findings[0].message
+
     def test_ra005_locked_mutation_is_clean(self):
         findings = _analyze_source("""
             import threading

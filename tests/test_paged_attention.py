@@ -11,7 +11,8 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.config import ATTN, LOCAL, MLP, ModelConfig, RLConfig
-from repro.kernels.ops import paged_decode
+from repro.kernels.ops import (paged_decode, paged_decode_layers,
+                               paged_prefill, paged_prefill_layers)
 from repro.kernels.paged_attention import paged_attention
 from repro.models import init_params
 from repro.sampling import generate, generate_continuous
@@ -162,6 +163,231 @@ class TestDispatcher:
         np.testing.assert_array_equal(np.asarray(causal), np.asarray(nowin))
 
 
+def make_prefill_case(*, b=3, c=8, hkv=2, rep=4, d=32, page=8, npages=6,
+                      dtype=jnp.float32, seed=0, starts=None):
+    """Random pools + block table + *ragged chunk offsets*: slot s holds
+    a C-token query chunk at absolute positions starts[s] + [0, C), and
+    every position < starts[s] + C already has k/v in its pages (the
+    engine scatters the chunk's k/v before attending)."""
+    hq = hkv * rep
+    pool = 1 + b * npages + 3
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, c, hq, d), dtype)
+    kp = jax.random.normal(ks[1], (pool, page, hkv, d), dtype)
+    vp = jax.random.normal(ks[2], (pool, page, hkv, d), dtype)
+    host = np.random.default_rng(seed)
+    perm = host.permutation(np.arange(1, pool))
+    table = perm[:b * npages].reshape(b, npages).astype(np.int32)
+    if starts is None:
+        starts = host.integers(0, npages * page - c + 1, size=b)
+    starts = np.asarray(starts, np.int32)
+    positions = starts[:, None] + np.arange(c, dtype=np.int32)[None]
+    return q, kp, vp, jnp.asarray(table), jnp.asarray(positions)
+
+
+def _prefill_oracle(q, kp, vp, table, positions, *, window=None,
+                    softcap=None):
+    """Per-slot dense numpy softmax over the table's logical view, row
+    i attending kv positions <= positions[s, i] (window band applied) —
+    independent of every jax code path under test."""
+    qn = np.asarray(q, np.float32)
+    kpn, vpn = np.asarray(kp, np.float32), np.asarray(vp, np.float32)
+    tb, pos = np.asarray(table), np.asarray(positions)
+    b, c, hq, d = qn.shape
+    g = kpn.shape[2]
+    rep = hq // g
+    out = np.zeros_like(qn)
+    for s in range(b):
+        kc = kpn[tb[s]].reshape(-1, g, d)              # (W·page, G, D)
+        vc = vpn[tb[s]].reshape(-1, g, d)
+        cols = np.arange(kc.shape[0])
+        for i in range(c):
+            ok = cols <= pos[s, i]
+            if window is not None:
+                ok &= cols > pos[s, i] - window
+            for h in range(hq):
+                sc = kc[:, h // rep] @ qn[s, i, h] / np.sqrt(d)
+                if softcap is not None:
+                    sc = softcap * np.tanh(sc / softcap)
+                p = np.where(ok, np.exp(sc - sc[ok].max()), 0.0)
+                p /= p.sum()
+                out[s, i, h] = p @ np.where(ok[:, None], vc[:, h // rep], 0)
+    return out
+
+
+class TestPrefillParity:
+    @pytest.mark.parametrize("page", [8, 16])
+    @pytest.mark.parametrize("rep", [1, 4])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_sweep_vs_per_slot_dense(self, page, rep, dtype):
+        q, kp, vp, table, positions = make_prefill_case(
+            page=page, rep=rep, dtype=dtype, seed=page + rep)
+        oracle = _prefill_oracle(q, kp, vp, table, positions)
+        for impl in ("gather", "ref", "pallas"):
+            out = paged_prefill(q, kp, vp, table, positions, impl=impl,
+                                interpret=True)
+            np.testing.assert_allclose(
+                np.asarray(out, np.float32), oracle, err_msg=impl,
+                **_tols(dtype))
+
+    @pytest.mark.parametrize("window", [5, 16])
+    def test_sliding_window_and_softcap(self, window):
+        q, kp, vp, table, positions = make_prefill_case(seed=17)
+        for cap in (None, 20.0):
+            oracle = _prefill_oracle(q, kp, vp, table, positions,
+                                     window=window, softcap=cap)
+            for impl in ("gather", "ref", "pallas"):
+                out = paged_prefill(q, kp, vp, table, positions,
+                                    kind="local", window=window,
+                                    softcap=cap, impl=impl, interpret=True)
+                np.testing.assert_allclose(
+                    np.asarray(out), oracle, rtol=2e-5, atol=2e-5,
+                    err_msg=f"{impl} cap={cap}")
+
+    def test_zero_offset_chunk(self):
+        # a fresh prompt's first chunk: starts = 0 everywhere
+        q, kp, vp, table, positions = make_prefill_case(
+            starts=[0, 0, 0], seed=23)
+        oracle = _prefill_oracle(q, kp, vp, table, positions)
+        for impl in ("ref", "pallas"):
+            out = paged_prefill(q, kp, vp, table, positions, impl=impl,
+                                interpret=True)
+            np.testing.assert_allclose(np.asarray(out), oracle,
+                                       rtol=2e-5, atol=2e-5, err_msg=impl)
+
+    def test_odd_chunk_width(self):
+        # C that doesn't divide the default q block: _fit_block tiling
+        q, kp, vp, table, positions = make_prefill_case(c=5, seed=29)
+        oracle = _prefill_oracle(q, kp, vp, table, positions)
+        out = paged_prefill(q, kp, vp, table, positions, impl="pallas",
+                            interpret=True)
+        np.testing.assert_allclose(np.asarray(out), oracle, rtol=2e-5,
+                                   atol=2e-5)
+
+
+class TestPrefillPoisoning:
+    """NaN in the scratch page / unreachable table tails must be causally
+    invisible to every prefill row — same contract as decode."""
+
+    @pytest.mark.parametrize("impl", ["ref", "pallas"])
+    def test_nan_scratch_page_invisible(self, impl):
+        q, kp, vp, table, positions = make_prefill_case(
+            starts=[0, 3, 9], seed=31)
+        # park every page past the chunk's reach on the scratch page,
+        # like the engine's table for a partially-prefilled slot
+        page = kp.shape[1]
+        tb = np.asarray(table).copy()
+        pos = np.asarray(positions)
+        for s in range(tb.shape[0]):
+            live = -(-int(pos[s, -1] + 1) // page)
+            tb[s, live:] = 0
+        clean = paged_prefill(q, kp, vp, jnp.asarray(tb), positions,
+                              impl=impl, interpret=True)
+        poisoned = paged_prefill(q, kp.at[0].set(jnp.nan),
+                                 vp.at[0].set(jnp.nan), jnp.asarray(tb),
+                                 positions, impl=impl, interpret=True)
+        assert bool(jnp.isfinite(poisoned).all())
+        np.testing.assert_array_equal(np.asarray(poisoned),
+                                      np.asarray(clean))
+
+
+class TestPrefillDispatcher:
+    def test_unknown_impl_raises(self):
+        q, kp, vp, table, positions = make_prefill_case(b=1, npages=2, c=4)
+        with pytest.raises(ValueError, match="unknown paged-attention"):
+            paged_prefill(q, kp, vp, table, positions, impl="turbo")
+
+    def test_bidir_rejected(self):
+        q, kp, vp, table, positions = make_prefill_case(b=1, npages=2, c=4)
+        with pytest.raises(ValueError, match="causal-only"):
+            paged_prefill(q, kp, vp, table, positions, kind="bidir")
+
+    def test_auto_matches_ref_off_tpu(self):
+        q, kp, vp, table, positions = make_prefill_case(seed=37)
+        auto = paged_prefill(q, kp, vp, table, positions)
+        ref = paged_prefill(q, kp, vp, table, positions, impl="ref")
+        np.testing.assert_array_equal(np.asarray(auto), np.asarray(ref))
+
+    def test_no_dense_view_in_ref_lowering(self):
+        """The point of the kernel: the ref path's XLA temp footprint
+        must undercut the gather path's materialized
+        (B, W·page, Hkv, D) logical view at wide tables."""
+        q, kp, vp, table, positions = make_prefill_case(
+            b=2, c=4, npages=24, page=8, starts=[0, 5], seed=41)
+        args = (q, kp, vp, table, positions)
+
+        def temp_bytes(impl):
+            lowered = paged_prefill.lower(*args, impl=impl)
+            return lowered.compile().memory_analysis().temp_size_in_bytes
+
+        # table width 24 pages but only pages_for(5 + 4) = 2 live pages:
+        # gather materializes the full-width view, ref streams per page
+        assert temp_bytes("ref") * 4 < temp_bytes("gather")
+
+
+class TestFusedLayers:
+    """One launch for all layers' pools: the folded (L→slot axis) call
+    must be bit-exact vs per-layer calls and issue exactly one
+    pallas_call."""
+
+    def _stacked(self, lyr=3, seed=43):
+        qs, kps, vps = [], [], []
+        for l in range(lyr):
+            q, kp, vp, table, positions = make_prefill_case(
+                seed=seed + 7 * l, starts=[2, 0, 11])
+            qs.append(q), kps.append(kp), vps.append(vp)
+        return (jnp.stack(qs), jnp.stack(kps), jnp.stack(vps), table,
+                positions)
+
+    @pytest.mark.parametrize("impl", ["gather", "ref", "pallas"])
+    def test_prefill_fused_bitexact(self, impl):
+        q, kp, vp, table, positions = self._stacked()
+        per = jnp.stack([paged_prefill(q[l], kp[l], vp[l], table, positions,
+                                       impl=impl, interpret=True)
+                         for l in range(q.shape[0])])
+        fused = paged_prefill_layers(q, kp, vp, table, positions,
+                                     impl=impl, interpret=True)
+        np.testing.assert_array_equal(
+            np.asarray(fused), np.asarray(per))  # noqa: RA003 — test sync
+
+    @pytest.mark.parametrize("impl", ["gather", "ref", "pallas"])
+    def test_decode_fused_bitexact(self, impl):
+        q, kp, vp, table, positions = self._stacked()
+        qd = q[:, :, :1]                                # (L, B, 1, Hq, D)
+        lengths = positions[:, -1] + 1
+        per = jnp.stack([paged_decode(qd[l], kp[l], vp[l], table, lengths,
+                                      impl=impl, interpret=True)
+                         for l in range(q.shape[0])])
+        fused = paged_decode_layers(qd, kp, vp, table, lengths,
+                                    impl=impl, interpret=True)
+        np.testing.assert_array_equal(
+            np.asarray(fused), np.asarray(per))  # noqa: RA003 — test sync
+
+    def test_single_pallas_launch(self, monkeypatch):
+        import repro.kernels.ops as ops_mod
+        import repro.kernels.paged_attention as pa
+        q, kp, vp, table, positions = self._stacked()
+        lengths = positions[:, -1] + 1
+        calls = []
+        real = pa.pl.pallas_call
+
+        def counting(*a, **kw):
+            calls.append(1)
+            return real(*a, **kw)
+
+        monkeypatch.setattr(pa.pl, "pallas_call", counting)
+        lyr = q.shape[0]
+        qf, kpf, vpf, tbl, ln = ops_mod._fold_layers(
+            q[:, :, :1], kp, vp, table, lengths)
+        pa.paged_attention(qf[:, 0], kpf, vpf, tbl, ln, interpret=True)
+        assert len(calls) == 1                  # ONE launch for L layers
+        calls.clear()
+        for l in range(lyr):
+            pa.paged_attention(q[l, :, 0], kp[l], vp[l], table, lengths,
+                               interpret=True)
+        assert len(calls) == lyr
+
+
 TINY = ModelConfig(name="tiny-paged", family="dense", num_layers=2,
                    d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
                    vocab_size=32, block_pattern=(ATTN,), ffn_pattern=(MLP,),
@@ -195,6 +421,50 @@ class TestEngineBackends:
         np.testing.assert_allclose(np.asarray(r1["sampler_lp"]),
                                    np.asarray(r2["sampler_lp"]),
                                    rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("impl", ["gather", "ref", "pallas"])
+    def test_chunked_prefill_static_parity(self, rng, impl):
+        """Chunked prefill (the paged_prefill hot path — ragged chunk
+        offsets, narrowed tables) under every backend reproduces the
+        static engine."""
+        cfg = dataclasses.replace(TINY, paged_attn_impl=impl)
+        params = init_params(cfg, rng)
+        prompts = jax.random.randint(rng, (5, 9), 3, cfg.vocab_size)
+        rl = RLConfig(temperature=1.0, top_k=0, top_p=1.0, max_new_tokens=8)
+        r1 = generate(cfg, rl, params, prompts, rng, vocab_limit=20)
+        r2 = generate_continuous(cfg, rl, params, prompts, rng,
+                                 vocab_limit=20, num_slots=2, page_size=4,
+                                 prefill_chunk=4, sync_every=3)
+        np.testing.assert_array_equal(np.asarray(r1["completions"]),
+                                      np.asarray(r2["completions"]))
+        np.testing.assert_allclose(np.asarray(r1["sampler_lp"]),
+                                   np.asarray(r2["sampler_lp"]),
+                                   rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("impl", ["gather", "ref"])
+    def test_prefix_cache_cow_pages(self, rng, impl):
+        """Shared-prefix COW pages + chunked prefill: requests whose
+        prompts share a prefix prefill against refcounted pages from
+        `prefix_cache`; every backend must leave completions unchanged
+        vs the uncached run."""
+        cfg = dataclasses.replace(TINY, paged_attn_impl=impl)
+        params = init_params(cfg, rng)
+        base = np.asarray(jax.random.randint(rng, (1, 10), 3,
+                                             cfg.vocab_size))
+        prompts = np.repeat(base, 4, axis=0)
+        prompts[2:, -2:] = [[3, 4], [5, 6]]    # diverge after the prefix
+        prompts = jnp.asarray(prompts)
+        rl = RLConfig(temperature=1.0, top_k=0, top_p=1.0, max_new_tokens=6)
+        cached = generate_continuous(cfg, rl, params, prompts, rng,
+                                     vocab_limit=20, num_slots=2,
+                                     page_size=4, prefill_chunk=4,
+                                     sync_every=3, prefix_cache=True)
+        plain = generate_continuous(cfg, rl, params, prompts, rng,
+                                    vocab_limit=20, num_slots=2,
+                                    page_size=4, prefill_chunk=4,
+                                    sync_every=3, prefix_cache=False)
+        np.testing.assert_array_equal(np.asarray(cached["completions"]),
+                                      np.asarray(plain["completions"]))
 
     def test_gqa_local_window_ref_backend(self, rng):
         cfg = dataclasses.replace(GQA_LOCAL, paged_attn_impl="ref")
@@ -260,5 +530,26 @@ class TestTensorParallel:
         ref1 = generate_continuous(cfg, rl, params, prompts, key,
                                    vocab_limit=20, num_slots=2,
                                    page_size=4, sync_every=2)
+        np.testing.assert_array_equal(np.asarray(roll["completions"]),
+                                      np.asarray(ref1["completions"]))
+
+    def test_serve_plan_ref_backend_chunked_prefill(self):
+        """Chunked prefill (paged_prefill_ref under the plan's sharding
+        constraints) on a 1x2 serve plan matches the unplanned run."""
+        from repro.parallel import ExecutionPlan, make_debug_mesh
+        plan = ExecutionPlan(mesh=make_debug_mesh(1, 2), mode="serve")
+        cfg = dataclasses.replace(TINY, paged_attn_impl="ref")
+        key = jax.random.PRNGKey(1)
+        params = plan.device_put_params(cfg, init_params(cfg, key))
+        prompts = jax.random.randint(key, (4, 9), 3, cfg.vocab_size)
+        rl = RLConfig(temperature=1.0, top_k=0, top_p=1.0, max_new_tokens=6)
+        roll = generate_continuous(cfg, rl, params, prompts, key,
+                                   vocab_limit=20, num_slots=2,
+                                   page_size=4, prefill_chunk=3,
+                                   sync_every=2, plan=plan)
+        ref1 = generate_continuous(cfg, rl, params, prompts, key,
+                                   vocab_limit=20, num_slots=2,
+                                   page_size=4, prefill_chunk=3,
+                                   sync_every=2)
         np.testing.assert_array_equal(np.asarray(roll["completions"]),
                                       np.asarray(ref1["completions"]))

@@ -6,12 +6,15 @@ compiles at most `phases x pow2_bucket_count(pages_per_slot)` jitted
 chunk executables (plus a bounded set of eager scatter/convert ops), and
 a *steady* run — same shapes again — compiles exactly nothing.
 """
+import dataclasses
+
 import jax
 import numpy as np
 import pytest
 
 from repro.analysis.sentinel import (RecompileSentinel, executable_bound,
-                                     pow2_bucket_count)
+                                     pow2_bucket_count,
+                                     prefill_executable_bound)
 from repro.config import ATTN, MLP, ModelConfig, RLConfig
 from repro.models import init_params
 from repro.sampling import ContinuousEngine
@@ -31,10 +34,10 @@ WORKLOAD = [(3, 4), (7, 8), (12, 6), (5, 8), (20, 8), (9, 3), (15, 8),
             (4, 8)]
 
 
-def _engine():
+def _engine(cfg=TINY):
     rl = RLConfig(temperature=1.0, top_k=0, top_p=1.0, max_new_tokens=8)
-    params = init_params(TINY, jax.random.PRNGKey(0))
-    eng = ContinuousEngine(TINY, params, rl=rl, max_total_tokens=32,
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = ContinuousEngine(cfg, params, rl=rl, max_total_tokens=32,
                            num_slots=NUM_SLOTS, page_size=4, sync_every=2,
                            prefill_chunk=PREFILL_CHUNK, vocab_limit=20,
                            prefix_cache=False, key=jax.random.PRNGKey(1))
@@ -62,17 +65,29 @@ class TestPow2BucketCount:
         assert pow2_bucket_count(1024) == 11
         assert executable_bound(1024, phases=2, slack=0) == 22
 
+    def test_prefill_bound(self):
+        # prefill executables key on (chunk width, width bucket): the
+        # configured chunk plus shorter final tails × pow2 table widths
+        assert prefill_executable_bound(4, 8) == 4 * 4
+        assert prefill_executable_bound(None, 1024) == 11
+        # chunked prefill stays O(chunk · log pool), never O(pool)
+        assert prefill_executable_bound(8, 1024) < 1024
+
 
 class TestEngineExecutableBound:
     def test_mixed_lengths_bucketed_then_steady_zero(self):
         eng, rl = _engine()
         buckets = pow2_bucket_count(eng.pages_per_slot)
-        # cold bound: one executable per (phase, width bucket) for the
-        # two jitted chunk families (prefill, decode), plus the eager
+        # cold bound: decode-chunk executables over the width buckets,
+        # prefill-chunk executables over (chunk width × width bucket)
+        # per the analytic sentinel bound, plus the eager
         # per-(slot, chunk-offset) last-logits scatter and a handful of
         # one-off convert/fill ops
         eager_slack = NUM_SLOTS * PREFILL_CHUNK + 8
-        bound = 2 * buckets + eager_slack
+        bound = (buckets
+                 + prefill_executable_bound(PREFILL_CHUNK,
+                                            eng.pages_per_slot)
+                 + eager_slack)
         with RecompileSentinel("cold") as cold:
             r1 = _epoch(eng, rl, rid0=0)
         assert cold.compiles > 0          # the sentinel actually counts
@@ -88,6 +103,25 @@ class TestEngineExecutableBound:
         # counts differ — but every request must have finished)
         assert len(r1) == len(WORKLOAD) and len(r2) == len(WORKLOAD)
         assert all(len(r.tokens) >= 1 for r in r1 + r2)
+
+    def test_ref_backend_bucketed_then_steady_zero(self):
+        # the paged-prefill/decode ref kernels (no dense gather) must hit
+        # the same executable budget: widths still bucket through
+        # _live_width, and a steady second epoch compiles nothing
+        cfg = dataclasses.replace(TINY, paged_attn_impl="ref")
+        eng, rl = _engine(cfg)
+        bound = (pow2_bucket_count(eng.pages_per_slot)
+                 + prefill_executable_bound(PREFILL_CHUNK,
+                                            eng.pages_per_slot)
+                 + NUM_SLOTS * PREFILL_CHUNK + 8)
+        with RecompileSentinel("ref-cold") as cold:
+            r1 = _epoch(eng, rl, rid0=0)
+        assert cold.compiles > 0
+        cold.assert_bound(bound, "ref-impl cold epoch")
+        with RecompileSentinel("ref-steady") as steady:
+            r2 = _epoch(eng, rl, rid0=100)
+        steady.assert_bound(0, "ref-impl steady epoch")
+        assert len(r1) == len(WORKLOAD) and len(r2) == len(WORKLOAD)
 
     def test_assert_bound_raises(self):
         s = RecompileSentinel("x")
