@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.config import (HeteroConfig, ModelConfig, RLConfig, TrainConfig,
                           ATTN, MLP)
 from repro.core.diagnostics import MetricsHistory, best_last_gap
@@ -120,6 +121,27 @@ def run_method(loss_type: str, *, mode: str = "online",
         "staleness_mean": float(np.nanmean(hist.get("staleness"))),
         "history": hist,
     }
+
+
+STABILITY_KEYS = ("eval_best", "eval_last", "gap", "iw_var_mean",
+                  "iw_var_max", "kl_mean", "grad_norm_std",
+                  "staleness_mean")
+
+
+def publish_method_metrics(rec: Dict, *, condition: str = "table2") -> None:
+    """Mirror a ``run_method`` summary into the unified obs registry as
+    ``bench_<key>{method=...,condition=...}`` gauges — the paper's
+    stability quantities (best-to-last gap, IW variance, KL, grad-norm
+    std, staleness) become scrapeable next to the live runtime gauges
+    instead of living only in CSV rows. No-op while the registry is
+    disabled."""
+    if not obs.metrics.enabled:
+        return
+    for k in STABILITY_KEYS:
+        obs.metrics.gauge(
+            f"bench_{k}",
+            "per-method stability summary (Table 2 / Fig. 4)",
+            method=rec["loss_type"], condition=condition).set(rec[k])
 
 
 def csv_row(name: str, rec: Dict, keys: List[str]) -> str:

@@ -1,0 +1,165 @@
+"""Observability overhead + trace-export smoke: what the obs spine costs.
+
+Two questions, answered with numbers:
+
+1. **Disabled overhead** — the registry/tracer are constructed into every
+   hot path (engine step, sampler generate, learner step) but default
+   off; the zero-cost contract says a disabled run must be
+   indistinguishable from a build without them. Measured by driving the
+   ``serve_latency`` poisson scenario with obs off vs on and comparing
+   wall time (min over reps; open-loop arrivals are identical).
+2. **Trace well-formedness** — the enabled runs must export
+   Perfetto-loadable Chrome traces: one wall-clock serve trace carrying
+   engine prefill/decode spans, one EventSim hetero trace carrying
+   learner/sampler spans on the *virtual* clock — same format, different
+   clock, as promised by the pluggable-clock design.
+
+  PYTHONPATH=src python -m benchmarks.obs_bench [--smoke]
+
+Output: CSV rows ``obs,<metric>,...`` plus a ``BENCH_obs.json`` artifact
+(path: $BENCH_OBS_JSON) recording both overheads and trace inventories.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from benchmarks.serve_latency import (_cfg, _drive, _make_prompts,
+                                      _poisson_schedule)
+from repro import obs
+from repro.config import HeteroConfig, RLConfig, ServeConfig, TrainConfig
+from repro.models import init_params
+from repro.obs import validate_chrome_trace, write_chrome_trace
+from repro.sampling import build_engine
+from repro.serving.api import Request, SamplingParams
+
+SMOKE_ENV = os.environ.get("BENCH_SMOKE", "0") == "1"
+JSON_PATH = os.environ.get("BENCH_OBS_JSON", "BENCH_obs.json")
+
+
+def _serve_drive_once(smoke: bool, seed: int = 0) -> float:
+    """One poisson serve_latency drive; returns wall seconds. The obs
+    state (enabled/disabled) is whatever the caller configured — that is
+    the variable under test."""
+    rng = np.random.default_rng(seed)
+    cfg = _cfg(smoke)
+    prefix_len, tail_len = (16, 4) if smoke else (48, 8)
+    max_new = 8 if smoke else 16
+    n = 12 if smoke else 48
+    rl = RLConfig(temperature=1.0, top_k=0, top_p=1.0,
+                  max_new_tokens=max_new, engine="continuous")
+    sp = SamplingParams.from_rl(rl)
+    serve = ServeConfig(num_slots=2 if smoke else 4,
+                        page_size=4 if smoke else 16,
+                        sync_every=4 if smoke else 8,
+                        max_total_tokens=prefix_len + tail_len + max_new,
+                        max_queue=64, seed=seed)
+    prompts = _make_prompts(n, prefix_len, tail_len, rng)
+    arrivals = _poisson_schedule(n, 0.02 if smoke else 0.01, rng)
+    key = jax.random.PRNGKey(seed)
+    engine = build_engine(cfg, init_params(cfg, key), serve, rl=rl,
+                          vocab_limit=cfg.vocab_size, key=key)
+    # warm executables outside the timed region
+    engine.generate([Request(rid=10_000,
+                             prompt=prompts[0][:prefix_len + tail_len],
+                             params=sp)])
+    engine.prefix_cache.clear()
+    t0 = time.perf_counter()
+    _drive(engine, serve, arrivals, prompts, sp)
+    return time.perf_counter() - t0
+
+
+def _hetero_trace(smoke: bool, path: str, seed: int = 0) -> Dict:
+    """A tiny EventSim hetero run with obs on: the virtual clock drives
+    the tracer, so learner step windows and sampler generate windows land
+    at *simulated* timestamps (hours of WAN delay render in one page)."""
+    from benchmarks.common import TINY, task_and_tok
+    from repro.hetero import HeteroRuntime
+    from repro.training import init_state
+
+    obs.configure(True, clear=True)
+    task, tok = task_and_tok(seed)
+    rl = RLConfig(loss_type="gepo", group_size=4, max_new_tokens=4,
+                  beta_kl=0.005)
+    tc = TrainConfig(learning_rate=1e-3, total_steps=4)
+    hcfg = HeteroConfig(num_samplers=2, max_delay_steps=64,
+                        delay_median_s=600.0, seed=seed)
+    state = init_state(TINY, tc, init_params(TINY, jax.random.PRNGKey(seed)))
+    rt = HeteroRuntime(TINY, rl, tc, hcfg, task, tok, state,
+                       prompts_per_batch=4)
+    rt.run(4)
+    n = write_chrome_trace(obs.trace, path)
+    validate_chrome_trace(path)
+    names = {e["name"] for e in obs.trace.events()}
+    for want in ("learner_step", "sampler_generate", "step_window",
+                 "gen_window"):
+        assert want in names, f"hetero trace missing {want!r}: {names}"
+    return {"path": path, "events": n, "span_names": sorted(names)}
+
+
+def run(smoke: bool = None) -> List[str]:
+    smoke = SMOKE_ENV if smoke is None else smoke
+    reps = 2 if smoke else 3
+    rows: List[str] = []
+
+    # -- disabled vs enabled serve drives -----------------------------
+    obs.configure(False, clear=True)
+    t_off = min(_serve_drive_once(smoke, seed=r) for r in range(reps))
+    obs.configure(True, clear=True)
+    t_on = min(_serve_drive_once(smoke, seed=r) for r in range(reps))
+    overhead_pct = 100.0 * (t_on - t_off) / max(t_off, 1e-9)
+
+    # -- wall-clock serve trace (from the enabled drives) -------------
+    serve_path = os.environ.get("BENCH_OBS_SERVE_TRACE",
+                                "TRACE_serve.json")
+    n_serve = write_chrome_trace(obs.trace, serve_path)
+    validate_chrome_trace(serve_path)
+    serve_names = {e["name"] for e in obs.trace.events()}
+    for want in ("prefill", "decode"):
+        assert want in serve_names, \
+            f"serve trace missing {want!r}: {serve_names}"
+
+    # -- EventSim hetero trace (virtual clock, same format) -----------
+    hetero_path = os.environ.get("BENCH_OBS_HETERO_TRACE",
+                                 "TRACE_hetero.json")
+    hetero = _hetero_trace(smoke, hetero_path)
+
+    obs.configure(False, clear=True)      # leave no residue for later
+    rows.append(f"obs,overhead,disabled_s={t_off:.3f},"
+                f"enabled_s={t_on:.3f},overhead_pct={overhead_pct:.1f}")
+    rows.append(f"obs,serve_trace,events={n_serve},path={serve_path}")
+    rows.append(f"obs,hetero_trace,events={hetero['events']},"
+                f"path={hetero_path}")
+    artifact = {
+        "meta": {"smoke": smoke, "reps": reps},
+        "overhead": {"disabled_s": t_off, "enabled_s": t_on,
+                     "overhead_pct": overhead_pct},
+        "serve_trace": {"path": serve_path, "events": n_serve,
+                        "span_names": sorted(serve_names)},
+        "hetero_trace": hetero,
+    }
+    try:
+        with open(JSON_PATH, "w") as f:
+            json.dump(artifact, f, indent=1)
+        rows.append(f"# wrote {JSON_PATH}")
+    except OSError:
+        rows.append(f"# could not write {JSON_PATH}")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    for row in run(smoke=args.smoke or SMOKE_ENV):
+        print(row, flush=True)
+
+
+if __name__ == "__main__":
+    main()

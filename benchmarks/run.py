@@ -32,6 +32,7 @@ MODULES = [
     ("scaling", "benchmarks.scaling_bench"),
     ("sync", "benchmarks.sync_bench"),
     ("sentinel", "benchmarks.recompile_bench"),
+    ("obs", "benchmarks.obs_bench"),
 ]
 
 # modules cheap enough for the CI smoke job ("serve" stays out: CI
@@ -48,9 +49,11 @@ MODULES = [
 # "serve_lat" drives the admission-controlled front door under Poisson/
 # bursty/overload open-loop load and emits BENCH_serve.json;
 # "sentinel" asserts the engine's pow2-bucketed executable bound under
-# the recompile sentinel (cold run <= bound, steady run compiles zero)
+# the recompile sentinel (cold run <= bound, steady run compiles zero);
+# "obs" measures tracing overhead (disabled vs enabled serve drive) and
+# validates the exported Chrome traces parse (emits BENCH_obs.json)
 SMOKE_MODULES = ("fig2", "theory", "logprob", "decode", "scaling", "sync",
-                 "serve_lat", "sentinel")
+                 "serve_lat", "sentinel", "obs")
 
 
 def main() -> None:

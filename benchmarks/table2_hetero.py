@@ -5,11 +5,11 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import csv_row, run_method
+from benchmarks.common import (STABILITY_KEYS, csv_row,
+                               publish_method_metrics, run_method)
 
 METHODS = ("bnpo", "dr_grpo", "grpo", "gspo", "gepo")
-KEYS = ("eval_best", "eval_last", "gap", "iw_var_mean", "iw_var_max",
-        "kl_mean", "grad_norm_std", "staleness_mean")
+KEYS = STABILITY_KEYS
 
 _cache = {}
 
@@ -19,6 +19,10 @@ def records():
         for m in METHODS:
             _cache[m] = run_method(m, mode="hetero", max_delay=64,
                                    delay_median_s=900.0)
+            # stability summaries double as registry gauges (method- and
+            # condition-labeled) so a scraped /metrics carries the same
+            # numbers the CSV table reports
+            publish_method_metrics(_cache[m], condition="table2")
     return _cache
 
 
@@ -35,9 +39,11 @@ def run() -> list:
     rows.append(f"fig4,iw_var_gepo_vs_gspo(mild_kl),"
                 f"{gepo['iw_var_mean']:.4g},{gspo['iw_var_mean']:.4g},"
                 f"kl={gepo['kl_mean']:.2g}/{gspo['kl_mean']:.2g},-,-,-,-")
-    stress = {m: run_method(m, mode="hetero", max_delay=64,
-                            delay_median_s=1700.0, lr=8e-3)
-              for m in ("gspo", "gepo")}
+    stress = {}
+    for m in ("gspo", "gepo"):
+        stress[m] = run_method(m, mode="hetero", max_delay=64,
+                               delay_median_s=1700.0, lr=8e-3)
+        publish_method_metrics(stress[m], condition="high_kl")
     g2, s2 = stress["gepo"], stress["gspo"]
     rows.append(f"fig4,iw_var_gepo_vs_gspo(high_kl),"
                 f"{g2['iw_var_mean']:.4g},{s2['iw_var_mean']:.4g},"
@@ -53,6 +59,7 @@ def run() -> list:
     # wire bytes, dedup ratio and simulated sync seconds per run.
     bw = run_method("gepo", mode="hetero", max_delay=64,
                     delay_median_s=900.0, bandwidth_mbps=200.0)
+    publish_method_metrics(bw, condition="200Mbps")
     rows.append(f"table2_hetero,gepo@200Mbps,"
                 + ",".join(f"{bw[k]:.4f}" for k in KEYS))
     rows.append(f"table2_link,gepo@200Mbps,"

@@ -23,6 +23,8 @@ from typing import List
 
 import jax
 
+from repro import obs
+
 # Event key emitted once per XLA backend compile (observed on jax 0.4.x
 # CPU and TPU backends alike). Duration listeners fire with
 # (event_name, duration_secs, **kwargs).
@@ -32,10 +34,22 @@ _active: List["RecompileSentinel"] = []
 _active_lock = threading.Lock()
 _registered = False
 
+# Unified-registry mirror: every observed compile also increments this
+# counter (and a compile-seconds counter), so steady-state recompiles
+# surface on a scraped /metrics endpoint — paging an operator — instead
+# of only failing tests/test_recompile.py after the fact. No-op while
+# the registry is disabled.
+_M_COMPILES = obs.metrics.counter(
+    "xla_compiles_total", "XLA backend compiles observed")
+_M_COMPILE_SECONDS = obs.metrics.counter(
+    "xla_compile_seconds_total", "seconds spent in XLA backend compiles")
+
 
 def _on_event(event: str, duration: float, **kwargs) -> None:
     if _COMPILE_EVENT not in event:
         return
+    _M_COMPILES.inc()
+    _M_COMPILE_SECONDS.inc(max(float(duration), 0.0))
     with _active_lock:
         for s in _active:
             s._record(event)
@@ -48,6 +62,14 @@ def _ensure_listener() -> None:
             return
         jax.monitoring.register_event_duration_secs_listener(_on_event)
         _registered = True
+
+
+def install_metrics_listener() -> None:
+    """Start counting XLA backend compiles into the unified registry
+    without opening a sentinel — long-lived processes (the serving front
+    door, hetero runtimes) call this once so ``xla_compiles_total`` is
+    live for their whole lifetime."""
+    _ensure_listener()
 
 
 class RecompileSentinel:
@@ -124,4 +146,4 @@ def prefill_executable_bound(prefill_chunk: int, max_pages: int) -> int:
 
 
 __all__ = ["RecompileSentinel", "pow2_bucket_count", "executable_bound",
-           "prefill_executable_bound"]
+           "prefill_executable_bound", "install_metrics_listener"]

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.checkpoint import PolicyStore
 from repro.config import (HeteroConfig, ModelConfig, RLConfig, ServeConfig,
                           TrainConfig)
@@ -119,6 +120,25 @@ class SamplerNode:
         self.warmup_tokens = 0
         self.warmup_seconds = 0.0
         self.engine_stats: Dict[str, float] = {}
+        # unified observability: this node's trace track + per-sampler
+        # metric handles (Fig. 4/5 live quantities land here too, set by
+        # the learner when it trains on this node's batches)
+        self._track = f"sampler-{sid}"
+        m = obs.metrics
+        self._m_batches = m.counter(
+            "sampler_batches_total", "rollout batches generated",
+            sampler=sid)
+        self._m_gen_tokens = m.counter(
+            "sampler_gen_tokens_total", "completion tokens generated",
+            sampler=sid)
+        self._m_syncs = m.counter(
+            "sampler_syncs_total", "weight syncs applied", sampler=sid)
+        self._m_sync_bytes = m.counter(
+            "sampler_sync_bytes_total", "weight-sync bytes on the wire",
+            sampler=sid)
+        self._g_version = m.gauge(
+            "sampler_policy_version", "policy version this node holds",
+            sampler=sid)
 
     @property
     def tokens_per_s(self) -> float:
@@ -165,9 +185,12 @@ class SamplerNode:
         # rid = batch row, fresh key per batch: draws are bit-identical to
         # the legacy generate() path on either engine
         sp = SamplingParams.from_rl(self.rl)
-        results = engine.generate(
-            [Request(rid=r, prompt=prompts_np[r], params=sp)
-             for r in range(b)], key=k)
+        with obs.trace.span("sampler_generate", track=self._track,
+                            sampler=self.sid, version=self.version,
+                            batch=b):
+            results = engine.generate(
+                [Request(rid=r, prompt=prompts_np[r], params=sp)
+                 for r in range(b)], key=k)
         roll = rollout_from_results(prompts_np, results,
                                     self.rl.max_new_tokens)
         if isinstance(engine, ContinuousEngine):
@@ -200,6 +223,8 @@ class SamplerNode:
         sampler_lp = np.concatenate([zeros, np.asarray(comp_lp)], axis=1)
         with self._lock:
             self.batches_generated += 1
+        self._m_batches.inc()
+        self._m_gen_tokens.inc(ntok)
         return RolloutBatch(tokens=np.asarray(roll["tokens"]), mask=mask,
                             sampler_lp=sampler_lp, rewards=rewards,
                             version=self.version, created_s=now_s,
@@ -235,8 +260,10 @@ class SamplerNode:
         target = plan if refit else self.plan
         for attempt in range(3):
             try:
-                v, host_tree, stats = self.subscriber.sync(
-                    self.params, cfg=self.cfg, plan=target)
+                with obs.trace.span("weight_sync", track=self._track,
+                                    sampler=self.sid, refit=refit):
+                    v, host_tree, stats = self.subscriber.sync(
+                        self.params, cfg=self.cfg, plan=target)
                 break
             except KeyError:
                 # threaded runtime race: the publisher pruned the fetched
@@ -255,6 +282,9 @@ class SamplerNode:
                 if v > self.version:
                     self.version = v
                     self.syncs += 1
+        self._m_syncs.inc()
+        self._m_sync_bytes.inc(stats.bytes_on_wire)
+        self._g_version.set(self.version)
         return stats.bytes_on_wire
 
     def _push_params_locked(self) -> None:
@@ -275,12 +305,19 @@ class SamplerNode:
         refs served from cache), simulated serialization seconds."""
         sub = self.subscriber
         total = sub.chunks_fetched + sub.chunk_hits
-        return {"sampler": float(self.sid), "syncs": float(self.syncs),
-                "bytes_on_wire": float(self.link.bytes_on_wire),
-                "sync_seconds": float(self.link.seconds),
-                "chunks_fetched": float(sub.chunks_fetched),
-                "chunk_hits": float(sub.chunk_hits),
-                "dedup_ratio": sub.chunk_hits / total if total else 0.0}
+        row = {"sampler": float(self.sid), "syncs": float(self.syncs),
+               "bytes_on_wire": float(self.link.bytes_on_wire),
+               "sync_seconds": float(self.link.seconds),
+               "chunks_fetched": float(sub.chunks_fetched),
+               "chunk_hits": float(sub.chunk_hits),
+               "dedup_ratio": sub.chunk_hits / total if total else 0.0}
+        # thin view over the registry: the same row lands as per-sampler
+        # link_* gauges so /metrics and sync_telemetry never disagree
+        if obs.metrics.enabled:
+            obs.metrics.set_many(
+                "link", {k: v for k, v in row.items() if k != "sampler"},
+                sampler=self.sid)
+        return row
 
 
 def link_telemetry(samplers: List[SamplerNode],
@@ -354,17 +391,35 @@ class LearnerNode:
         return None
 
     def train_on(self, batch: RolloutBatch) -> Dict[str, float]:
-        jb = self.plan.device_put_batch(self.cfg, {
-            "tokens": jnp.asarray(batch.tokens),
-            "mask": jnp.asarray(batch.mask),
-            "sampler_lp": jnp.asarray(batch.sampler_lp),
-            "rewards": jnp.asarray(batch.rewards)})
-        self.state, metrics = self.step_fn(self.state, jb)
-        self.step += 1
-        out = {k: float(v) for k, v in metrics.items()}
+        with obs.trace.span("learner_step", track="learner",
+                            step=self.step, version=batch.version,
+                            sampler=batch.sampler_id):
+            jb = self.plan.device_put_batch(self.cfg, {
+                "tokens": jnp.asarray(batch.tokens),
+                "mask": jnp.asarray(batch.mask),
+                "sampler_lp": jnp.asarray(batch.sampler_lp),
+                "rewards": jnp.asarray(batch.rewards)})
+            self.state, metrics = self.step_fn(self.state, jb)
+            self.step += 1
+            out = {k: float(v) for k, v in metrics.items()}
         out["staleness"] = float(self.step - 1 - batch.version)
         out["buffer_len"] = float(len(self.buffer))
         self.history.append(self.step, out)
+        # per-step fan-in to the unified registry: every scalar becomes a
+        # learner_* gauge, and the paper's Fig. 4/5 stability quantities
+        # additionally land as per-sampler gauges (the sampler whose
+        # batch this step consumed) — live staleness / KL / IW-variance
+        if obs.metrics.enabled:
+            obs.metrics.set_many("learner", out)
+            obs.metrics.gauge("learner_steps_total").set(self.step)
+            for k in ("staleness", "kl", "iw_var"):
+                if k in out:
+                    obs.metrics.gauge(
+                        f"sampler_{k}",
+                        f"{k} of the last batch trained from this sampler",
+                        sampler=batch.sampler_id).set(out[k])
         if self.step % self.hcfg.sync_interval_steps == 0:
-            self._publish()
+            with obs.trace.span("publish_checkpoint", track="learner",
+                                step=self.step):
+                self._publish()
         return out

@@ -15,6 +15,7 @@ from __future__ import annotations
 
 from typing import Any, Callable, Dict, List, Optional
 
+from repro import obs
 from repro.checkpoint import PolicyStore
 from repro.config import HeteroConfig, ModelConfig, RLConfig, TrainConfig
 from repro.core.diagnostics import MetricsHistory
@@ -46,6 +47,12 @@ class HeteroRuntime:
         self.eval_scores: List[float] = []
 
         self.sim = EventSim()
+        # observability rides the virtual clock: spans recorded during
+        # this run carry simulated seconds, so an EventSim trace loads in
+        # Perfetto exactly like a live one (enable obs before building
+        # the runtime, or re-point the clock later via obs.configure)
+        if obs.trace.enabled:
+            obs.trace.use_sim(self.sim)
         self.transport = Transport(self.sim)
         self.store = PolicyStore()
         self.learner = LearnerNode(cfg, rl, tc, hcfg, state, self.store,
@@ -65,6 +72,13 @@ class HeteroRuntime:
     # ---- event handlers --------------------------------------------------
     def _sampler_gen_done(self, s: SamplerNode) -> None:
         batch = s.generate_batch(self.sim.now)
+        # the generation occupied the simulated window ending now — an
+        # explicitly-timed span, since sim.now doesn't advance inside
+        # the handler (the node's own spans are zero-width markers here)
+        obs.trace.complete("gen_window",
+                           max(self.sim.now - self.sampler_gen_s, 0.0),
+                           self.sim.now, track=f"sampler-{s.sid}",
+                           version=batch.version)
         # data transfer is folded into the model-sync delay (App. E.1)
         self.transport.send(0.0,
                             lambda b=batch: self._deliver(b),
@@ -96,6 +110,12 @@ class HeteroRuntime:
 
     def _finish_step(self, batch: RolloutBatch) -> None:
         self.learner.train_on(batch)
+        # the step occupied the simulated window [now - step_s, now]
+        obs.trace.complete("step_window",
+                           max(self.sim.now - self.learner_step_s, 0.0),
+                           self.sim.now, track="learner",
+                           step=self.learner.step,
+                           staleness=self.learner.step - 1 - batch.version)
         self._learner_busy = False
         if (self.eval_fn is not None
                 and self.learner.step % self.eval_every == 0):

@@ -15,6 +15,7 @@ import threading
 import time
 from typing import Optional
 
+from repro import obs
 from repro.checkpoint import PolicyStore
 from repro.config import HeteroConfig, ModelConfig, RLConfig, TrainConfig
 from repro.core.diagnostics import MetricsHistory
@@ -58,6 +59,9 @@ class ThreadedHeteroRuntime:
         return (time.monotonic() - self._t0) / self.time_scale
 
     def _sampler_loop(self, s: SamplerNode) -> None:
+        # pin this worker thread's trace track so wall-clock spans land
+        # on the same named timeline the EventSim runtime uses
+        obs.trace.set_track(f"sampler-{s.sid}")
         next_sync = self._now_s() + s.next_delay()
         while not self._stop.is_set():
             batch = s.generate_batch(self._now_s())
@@ -83,6 +87,7 @@ class ThreadedHeteroRuntime:
         return link_telemetry(self.samplers, self.learner)
 
     def run(self, num_learner_steps: int) -> MetricsHistory:
+        obs.trace.set_track("learner")
         threads = [threading.Thread(target=self._sampler_loop, args=(s,),
                                     daemon=True) for s in self.samplers]
         for t in threads:

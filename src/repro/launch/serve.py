@@ -29,6 +29,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.config import RLConfig, ServeConfig
 from repro.configs import smoke
 from repro.data import ArithmeticTask, Tokenizer, encode_prompts
@@ -92,8 +93,18 @@ def main() -> None:
     ap.add_argument("--listen", action="store_true",
                     help="run the HTTP/websocket front door instead of "
                          "batch rounds")
+    # observability --------------------------------------------------------
+    ap.add_argument("--obs", action="store_true",
+                    help="enable the unified metrics registry + span "
+                         "tracer (off by default: zero-cost)")
+    ap.add_argument("--trace-out", default="",
+                    help="write a Chrome-trace/Perfetto JSON here on exit "
+                         "(implies --obs)")
     args = ap.parse_args()
     args.prompt_width = 8            # ArithmeticTask prompt width below
+
+    if args.obs or args.trace_out:
+        obs.configure(True)
 
     cfg = smoke(args.arch)
     serve = parse_serve_config(args)
@@ -125,9 +136,15 @@ def main() -> None:
         if memory is not None:
             raise SystemExit("--listen serves decoder-only KV-cache "
                              "architectures (continuous engine)")
-        asyncio.run(serve_forever(cfg, params, serve, rl=rl, tokenizer=tok,
-                                  vocab_limit=tok.vocab_size, plan=plan,
-                                  key=key))
+        try:
+            asyncio.run(serve_forever(cfg, params, serve, rl=rl,
+                                      tokenizer=tok,
+                                      vocab_limit=tok.vocab_size, plan=plan,
+                                      key=key))
+        finally:
+            if args.trace_out:
+                n = obs.export_chrome_trace(args.trace_out)
+                print(f"[serve] wrote {n} trace events -> {args.trace_out}")
         return
 
     engine = build_engine(cfg, params, serve, rl=rl,
@@ -161,6 +178,9 @@ def main() -> None:
     print(f"[serve] arch={cfg.name} engine={serve.engine} "
           f"batch={args.batch} total {total_tok} tokens, "
           f"{total_tok/(time.time()-t0):.1f} tok/s incl. compile")
+    if args.trace_out:
+        n = obs.export_chrome_trace(args.trace_out)
+        print(f"[serve] wrote {n} trace events -> {args.trace_out}")
 
 
 if __name__ == "__main__":

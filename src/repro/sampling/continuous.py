@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.config import ModelConfig, RLConfig
 from repro.data.tasks import EOS, PAD
 from repro.models import decode_step, forward
@@ -210,6 +211,30 @@ class ContinuousEngine:
         self._max_new = np.ones((num_slots,), np.int32)
         self._req_keys = np.zeros((num_slots, 2), np.uint32)  # threefry data
         self._results: Dict[int, GenerationResult] = {}
+        # unified observability (repro.obs): handles bound once — each
+        # use is one enabled-check when the registry is off (the
+        # zero-cost contract obs_bench enforces on this hot path)
+        m = obs.metrics
+        self._tr = obs.trace
+        self._m_prefill_chunks = m.counter(
+            "engine_prefill_chunks_total", "prefill chunks executed")
+        self._m_prefill_tokens = m.counter(
+            "engine_prefill_tokens_total", "prompt tokens prefilled")
+        self._m_decode_steps = m.counter(
+            "engine_decode_steps_total", "decode steps executed")
+        self._m_cow = m.counter(
+            "engine_cow_copies_total", "shared-prefix copy-on-write copies")
+        self._g_free_pages = m.gauge(
+            "engine_free_pages", "KV pages on the free list")
+        self._g_queue = m.gauge(
+            "engine_queue_depth", "requests queued behind admission")
+        self._g_slot_util = m.gauge(
+            "engine_slot_utilization", "decode-slot occupancy (instant)")
+        self._g_prefix_hits = m.gauge(
+            "engine_prefix_cache_hits", "shared-prefix cache hits")
+        self._g_prefix_reused = m.gauge(
+            "engine_prefix_tokens_reused",
+            "prompt tokens served from cached prefix pages")
 
     # ------------------------------------------------------------------
     @property
@@ -280,6 +305,23 @@ class ContinuousEngine:
     def pop_result(self, rid: int) -> Optional[GenerationResult]:
         return self._results.pop(rid, None)
 
+    def _publish_gauges(self) -> None:
+        """Page-pool / queue / prefix-cache gauges, refreshed once per
+        ``step`` round. Guarded as a block so the disabled path pays one
+        check instead of one per gauge."""
+        if not obs.metrics.enabled:
+            return
+        sched = self.sched
+        self._g_free_pages.set(self.free_pages)
+        self._g_queue.set(sched.queue_depth)
+        self._g_slot_util.set(
+            sum(1 for r in sched.slots if r is not None)
+            / max(self.num_slots, 1))
+        if self.prefix_cache is not None:
+            st = self.prefix_cache.stats
+            self._g_prefix_hits.set(st.get("hits", 0))
+            self._g_prefix_reused.set(st.get("tokens_reused", 0))
+
     # ------------------------------------------------------------------
     def step(self, now_s: Optional[float] = None) -> List[TokenEvent]:
         """One scheduler round: admit → one prefill chunk per prefilling
@@ -299,6 +341,7 @@ class ContinuousEngine:
                                            jnp.int32(r.cow_src),
                                            jnp.int32(r.cow_dst))
                 sched.stats["cow_copies"] += 1
+                self._m_cow.inc()
         if not newly and sched.queue_depth > 0 \
                 and all(r is None for r in sched.slots):
             raise RuntimeError(
@@ -326,12 +369,17 @@ class ContinuousEngine:
                                 self.pages_per_slot)
             page_row = jnp.asarray(
                 sched.block_table[pref.slot:pref.slot + 1, :width])
-            logits_c, self.pool = _prefill_chunk_jit(
-                self.cfg, self.params, self.pool, page_row,
-                jnp.asarray(chunk[None]), jnp.int32(c0), plan=self.plan)
+            with self._tr.span("prefill", track="engine", rid=pref.rid,
+                               slot=pref.slot, start=c0, chunk=cw,
+                               width=width):
+                logits_c, self.pool = _prefill_chunk_jit(
+                    self.cfg, self.params, self.pool, page_row,
+                    jnp.asarray(chunk[None]), jnp.int32(c0), plan=self.plan)
             sched.stats["prefill_chunks"] += 1
             pref.prefill_pos = min(pref.prompt_len, c0 + cw)
             sched.stats["prefill_tokens"] += pref.prefill_pos - c0
+            self._m_prefill_chunks.inc()
+            self._m_prefill_tokens.inc(pref.prefill_pos - c0)
             if pref.prefill_pos >= pref.prompt_len:  # prompt fully cached
                 s = pref.slot
                 self._last = self._last.at[s].set(
@@ -349,6 +397,7 @@ class ContinuousEngine:
 
         dec = sched.decoding()
         if not dec:
+            self._publish_gauges()
             return events
         # non-decoding slots (empty, or mid-prefill) must scatter their
         # dead PAD writes into the scratch page — NOT position 0 of pages
@@ -362,13 +411,18 @@ class ContinuousEngine:
             self.pages_per_slot)
         bt = sched.block_table[:, :width].copy()
         bt[~self._active] = SCRATCH_PAGE
-        toks, lps, self._last, self.pool = _decode_chunk_jit(
-            self.cfg, self.rl, self.params, self.pool, jnp.asarray(bt),
-            self._last, jnp.asarray(self._pos), jnp.asarray(self._active),
-            jnp.asarray(self._req_keys), jnp.asarray(self._gen),
-            jnp.asarray(self._max_new), self.vocab_limit, self.sync_every,
-            plan=self.plan)
+        with self._tr.span("decode", track="engine",
+                           slots=len(dec), chunk=self.sync_every,
+                           width=width):
+            toks, lps, self._last, self.pool = _decode_chunk_jit(
+                self.cfg, self.rl, self.params, self.pool, jnp.asarray(bt),
+                self._last, jnp.asarray(self._pos),
+                jnp.asarray(self._active),
+                jnp.asarray(self._req_keys), jnp.asarray(self._gen),
+                jnp.asarray(self._max_new), self.vocab_limit,
+                self.sync_every, plan=self.plan)
         sched.stats["decode_steps"] += self.sync_every
+        self._m_decode_steps.inc(self.sync_every)
         # deliberate sync point: the scheduler needs this chunk's tokens
         # on host for EOS recycling/admission — one sync per sync_every
         # decode steps, the amortization RA003 exists to protect
@@ -402,6 +456,7 @@ class ContinuousEngine:
                 events.append(TokenEvent(rid=r.rid, token=-1, logp=0.0,
                                          index=r.gen_count, finished=True,
                                          finish_reason=reason))
+        self._publish_gauges()
         return events
 
     # ------------------------------------------------------------------

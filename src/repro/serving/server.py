@@ -40,6 +40,8 @@ from typing import Any, Dict, Optional, Tuple
 
 import numpy as np
 
+from repro import obs
+from repro.analysis.sentinel import install_metrics_listener
 from repro.config import ModelConfig, RLConfig, ServeConfig
 from repro.sampling.continuous import ContinuousEngine
 from repro.sampling.engine import build_engine
@@ -106,6 +108,11 @@ class FrontDoor:
                              "resolved to a non-streaming engine")
         self.admission = AdmissionController(serve, self.engine)
         self.telemetry = ServeTelemetry(serve.num_slots)
+        # unified observability: compile events count into the registry
+        # for this process's lifetime (steady-state recompiles are an
+        # operator page, not just a test failure), and /metrics serves
+        # the registry as Prometheus text when asked for text/plain
+        install_metrics_listener()
         self._pending: asyncio.Queue = asyncio.Queue()
         self._subs: Dict[int, asyncio.Queue] = {}
         self._next_rid = 0
@@ -223,6 +230,7 @@ class FrontDoor:
             except ValueError:
                 await self._respond(writer, 400, {"error": "bad request"})
                 return
+            path, _, query = path.partition("?")
             headers: Dict[str, str] = {}
             while True:
                 line = await reader.readline()
@@ -236,7 +244,13 @@ class FrontDoor:
                 await self._respond(writer, 200,
                                     {"ok": True, "stats": self.engine.stats()})
             elif method == "GET" and path == "/metrics":
-                await self._respond(writer, 200, self.metrics())
+                accept = headers.get("accept", "")
+                if ("format=prometheus" in query or "text/plain" in accept
+                        or "openmetrics" in accept):
+                    await self._respond_text(writer,
+                                             obs.metrics.prometheus_text())
+                else:                       # back-compat JSON snapshot
+                    await self._respond(writer, 200, self.metrics())
             elif method == "POST" and path == "/generate":
                 body = await reader.readexactly(
                     int(headers.get("content-length", "0")))
@@ -266,6 +280,16 @@ class FrontDoor:
                       status, "Error")
         writer.write(f"HTTP/1.1 {status} {reason}\r\n"
                      "Content-Type: application/json\r\n"
+                     f"Content-Length: {len(body)}\r\n"
+                     "Connection: close\r\n\r\n".encode() + body)
+        await writer.drain()
+
+    @staticmethod
+    async def _respond_text(writer: asyncio.StreamWriter, text: str) -> None:
+        body = text.encode()
+        writer.write("HTTP/1.1 200 OK\r\n"
+                     "Content-Type: text/plain; version=0.0.4; "
+                     "charset=utf-8\r\n"
                      f"Content-Length: {len(body)}\r\n"
                      "Connection: close\r\n\r\n".encode() + body)
         await writer.drain()

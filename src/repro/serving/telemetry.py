@@ -12,24 +12,42 @@ an operator actually pages on:
   window between the first and last recorded completion);
 - admission-control outcomes (rejections by reason, expirations).
 
-Percentiles use the nearest-rank method over everything recorded since
-construction (or the last ``reset``); the benchmark keeps one collector
-per load scenario. No numpy dependency on the hot path — a sorted copy
-per snapshot is fine at front-door request rates.
+``ServeTelemetry`` is a thin view over the unified metrics registry
+(:mod:`repro.obs`): every ``record`` also feeds registry counters and
+bounded histograms, so ``/metrics`` Prometheus scrapes and the JSON
+snapshot come from one pipeline. Percentiles use the nearest-rank
+method over a **bounded seeded reservoir** (uniform sample, Algorithm
+R) rather than an unbounded list — a long-lived front door holds O(1)
+memory per SLO series, and the seeded sampling keeps test percentiles
+deterministic. No numpy dependency on the hot path.
 """
 from __future__ import annotations
 
 import math
-from typing import Dict, List, Optional
+from typing import Dict, Iterable, Optional
 
+from repro import obs
+from repro.obs import MetricsRegistry, Reservoir
 from repro.serving.api import GenerationResult
 
+# Reservoir capacity per SLO series. Nearest-rank p99 over a 4096-sample
+# uniform reservoir is exact until 4096 requests and a tight estimate
+# after; the serving benchmarks record far fewer, so their percentiles
+# are bit-identical to the unbounded-list behavior.
+RESERVOIR_CAPACITY = 4096
 
-def percentile(values: List[float], q: float) -> float:
+# Latency-shaped buckets for the registry histograms (seconds).
+_LAT_BUCKETS = (0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25,
+                0.5, 1.0, 2.5, 5.0, 15.0, 60.0)
+
+
+def percentile(values: Iterable[float], q: float) -> float:
     """Nearest-rank percentile (q in [0, 100]) of ``values``; NaN when
-    empty. Deterministic and exact for the small samples serving
-    benchmarks collect — no interpolation surprises across numpy
-    versions."""
+    empty or all-NaN. Deterministic and exact for the small samples
+    serving benchmarks collect — no interpolation surprises across
+    numpy versions. ``q=0`` is the minimum, ``q=100`` the maximum."""
+    if not 0.0 <= q <= 100.0:
+        raise ValueError(f"percentile q={q} outside [0, 100]")
     vals = sorted(v for v in values if not math.isnan(v))
     if not vals:
         return float("nan")
@@ -38,15 +56,43 @@ def percentile(values: List[float], q: float) -> float:
 
 
 class ServeTelemetry:
-    """Accumulates per-request outcomes into SLO summary statistics."""
+    """Accumulates per-request outcomes into SLO summary statistics.
 
-    def __init__(self, num_slots: int) -> None:
+    ``registry`` defaults to the process-wide ``obs.metrics``; pass a
+    private :class:`MetricsRegistry` to isolate (tests, benchmarks).
+    """
+
+    def __init__(self, num_slots: int, *,
+                 registry: Optional[MetricsRegistry] = None,
+                 reservoir_capacity: int = RESERVOIR_CAPACITY,
+                 seed: int = 0) -> None:
         self.num_slots = num_slots
+        self.reservoir_capacity = reservoir_capacity
+        self.seed = seed
+        reg = registry if registry is not None else obs.metrics
+        self._m_completed = reg.counter(
+            "serve_requests_completed_total", "requests run to completion")
+        self._m_expired = reg.counter(
+            "serve_requests_expired_total", "requests expired past deadline")
+        self._m_tokens = reg.counter(
+            "serve_tokens_out_total", "completion tokens decoded")
+        self._m_prompt = reg.counter(
+            "serve_prompt_tokens_total", "prompt tokens admitted")
+        self._m_prefix_hit = reg.counter(
+            "serve_prefix_hit_tokens_total",
+            "prompt tokens served from the shared-prefix cache")
+        self._h_ttft = reg.histogram(
+            "serve_ttft_seconds", "time to first token",
+            buckets=_LAT_BUCKETS)
+        self._h_latency = reg.histogram(
+            "serve_latency_seconds", "end-to-end request latency",
+            buckets=_LAT_BUCKETS)
         self.reset()
 
     def reset(self) -> None:
-        self.ttfts: List[float] = []
-        self.latencies: List[float] = []
+        self.ttfts = Reservoir(self.reservoir_capacity, seed=self.seed)
+        self.latencies = Reservoir(self.reservoir_capacity,
+                                   seed=self.seed + 1)
         self.tokens_out = 0
         self.prefix_hit_tokens = 0
         self.prompt_tokens = 0
@@ -59,6 +105,7 @@ class ServeTelemetry:
                done_s: Optional[float] = None) -> None:
         if res.finish_reason == "expired":
             self.expired += 1
+            self._m_expired.inc()
             return
         self.completed += 1
         self.tokens_out += res.gen_count
@@ -66,6 +113,12 @@ class ServeTelemetry:
         self.prefix_hit_tokens += res.prefix_hit_tokens
         self.ttfts.append(res.ttft_s)
         self.latencies.append(res.latency_s)
+        self._m_completed.inc()
+        self._m_tokens.inc(res.gen_count)
+        self._m_prompt.inc(res.prompt_len)
+        self._m_prefix_hit.inc(res.prefix_hit_tokens)
+        self._h_ttft.observe(res.ttft_s)
+        self._h_latency.observe(res.latency_s)
         if done_s is not None:
             if self._t_first is None:
                 self._t_first = done_s

@@ -73,21 +73,28 @@ def rl_loss_fn(cfg: ModelConfig, rl: RLConfig, params,
     elif memory is None and "image_embeds" in batch:
         memory = batch["image_embeds"]
     tokens = batch["tokens"]
-    logits, _, aux = forward(cfg, params, tokens[:, :-1], memory=memory)
-    learner_lp, learner_ent = _token_lp_ent(logits, tokens[:, 1:],
-                                            logprob_impl)
+    # named scopes thread phase names into the HLO metadata, so XLA /
+    # jax.profiler traces of the jitted step carry rl/forward,
+    # rl/logprob, rl/loss instead of one opaque jit_train_step blob
+    with jax.named_scope("rl_forward"):
+        logits, _, aux = forward(cfg, params, tokens[:, :-1], memory=memory)
+    with jax.named_scope("rl_logprob"):
+        learner_lp, learner_ent = _token_lp_ent(logits, tokens[:, 1:],
+                                                logprob_impl)
 
     sampler_lp = batch["sampler_lp"]
     if not rl.recompute_sampler_logps:
         # trust engine-side logps verbatim (paper shows this is unstable)
         sampler_lp = jax.lax.stop_gradient(sampler_lp)
 
-    adv = group_advantages(
-        batch["rewards"], rl.group_size,
-        normalize=rl.adv_normalize,
-        kind=rl.loss_type if rl.loss_type in ("bnpo", "dr_grpo") else "grpo")
-    loss, metrics = policy_loss(rl, learner_lp, sampler_lp, batch["mask"],
-                                adv, entropy=learner_ent)
+    with jax.named_scope("rl_loss"):
+        adv = group_advantages(
+            batch["rewards"], rl.group_size,
+            normalize=rl.adv_normalize,
+            kind=rl.loss_type if rl.loss_type in ("bnpo", "dr_grpo")
+            else "grpo")
+        loss, metrics = policy_loss(rl, learner_lp, sampler_lp,
+                                    batch["mask"], adv, entropy=learner_ent)
     for k, v in aux.items():                      # MoE router diagnostics
         metrics[k] = v / max(cfg.num_blocks, 1)
     metrics["reward_mean"] = batch["rewards"].mean()
@@ -139,14 +146,15 @@ def train_step(cfg: ModelConfig, rl: RLConfig, tc: TrainConfig,
         (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
             state.params, batch)
 
-    grads, gnorm = clip_by_global_norm(grads, tc.grad_clip)
-    lr = warmup_schedule(tc, state.step)
-    if optimizer == "adamw":
-        new_params, new_opt = adamw_update(tc, grads, state.opt,
-                                           state.params, lr)
-    else:
-        new_params, new_opt = adafactor_update(tc, grads, state.opt,
+    with jax.named_scope("optim_update"):
+        grads, gnorm = clip_by_global_norm(grads, tc.grad_clip)
+        lr = warmup_schedule(tc, state.step)
+        if optimizer == "adamw":
+            new_params, new_opt = adamw_update(tc, grads, state.opt,
                                                state.params, lr)
+        else:
+            new_params, new_opt = adafactor_update(tc, grads, state.opt,
+                                                   state.params, lr)
     metrics["grad_norm"] = gnorm
     metrics["lr"] = lr
     return TrainState(new_params, new_opt, state.step + 1), metrics

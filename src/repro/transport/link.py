@@ -17,6 +17,8 @@ from __future__ import annotations
 import math
 from typing import Optional
 
+from repro import obs
+
 
 class LinkDropped(Exception):
     """The link died mid-transfer; ``bytes_delivered`` made it across."""
@@ -60,6 +62,22 @@ class SimulatedLink:
         self.bytes_on_wire += int(nbytes)
         self.transfers += 1
         self.seconds += secs
+        tr = obs.trace
+        if tr.enabled:
+            # chunk fetches render as async flows: transfers overlap in
+            # wall/sim time, so they must not nest on the caller's track
+            fid = tr.next_flow_id()
+            t0 = tr.now()
+            tr.async_begin("chunk_transfer", fid, cat="transport", ts=t0,
+                           bytes=int(nbytes))
+            tr.async_end("chunk_transfer", fid, cat="transport",
+                         ts=t0 + secs)
+        if obs.metrics.enabled:
+            obs.metrics.counter(
+                "link_transfer_bytes_total",
+                "bytes moved over simulated WAN links").inc(nbytes)
+            obs.metrics.counter(
+                "link_transfers_total", "chunk/manifest transfers").inc()
         return secs
 
     def transfer(self, nbytes: int) -> float:

@@ -388,6 +388,54 @@ class TestFrontDoor:
                 await door.close()
         asyncio.run(scenario())
 
+    def test_metrics_prometheus_exposition(self, tiny_params):
+        """GET /metrics negotiates Prometheus text (Accept: text/plain or
+        ?format=prometheus) while the JSON snapshot stays the default;
+        the text carries the unified registry: serve SLO counters,
+        engine page-pool gauges, and the compile-sentinel mirror."""
+        from repro import obs
+
+        async def scenario():
+            door = self._door(tiny_params)
+            await door.start()
+            obs.configure(True, clear=True)
+            try:
+                status, _ = await self._http(
+                    door.port, "POST", "/generate",
+                    {"tokens": [5, 6, 7, 8], "max_new_tokens": 5})
+                assert status == 200
+                reader, writer = await asyncio.open_connection(
+                    "127.0.0.1", door.port)
+                writer.write(b"GET /metrics?format=prometheus HTTP/1.1\r\n"
+                             b"Host: t\r\nAccept: text/plain\r\n\r\n")
+                await writer.drain()
+                assert b"200" in await reader.readline()
+                ctype, n = b"", 0
+                while True:
+                    line = await reader.readline()
+                    if line in (b"\r\n", b""):
+                        break
+                    if line.lower().startswith(b"content-type:"):
+                        ctype = line
+                    if line.lower().startswith(b"content-length:"):
+                        n = int(line.split(b":")[1])
+                text = (await reader.readexactly(n)).decode()
+                writer.close()
+                assert b"text/plain" in ctype
+                assert "# TYPE serve_requests_completed_total counter" \
+                    in text
+                assert "serve_requests_completed_total 1" in text
+                assert "serve_ttft_seconds_bucket" in text
+                assert "engine_free_pages" in text        # page pool
+                assert "xla_compiles_total" in text       # sentinel mirror
+                # default (no Accept/format) still answers JSON
+                status, m = await self._http(door.port, "GET", "/metrics")
+                assert status == 200 and m["slo"]["completed"] == 1
+            finally:
+                obs.configure(False, clear=True)
+                await door.close()
+        asyncio.run(scenario())
+
     def test_websocket_stream(self, tiny_params):
         async def scenario():
             door = self._door(tiny_params)
