@@ -10,6 +10,8 @@ Output: CSV rows `table,setting,metrics...` on stdout.
 from __future__ import annotations
 
 import argparse
+import glob
+import json
 import os
 import time
 import traceback
@@ -33,6 +35,7 @@ MODULES = [
     ("sync", "benchmarks.sync_bench"),
     ("sentinel", "benchmarks.recompile_bench"),
     ("obs", "benchmarks.obs_bench"),
+    ("spec", "benchmarks.spec_bench"),
 ]
 
 # modules cheap enough for the CI smoke job ("serve" stays out: CI
@@ -51,9 +54,61 @@ MODULES = [
 # "sentinel" asserts the engine's pow2-bucketed executable bound under
 # the recompile sentinel (cold run <= bound, steady run compiles zero);
 # "obs" measures tracing overhead (disabled vs enabled serve drive) and
-# validates the exported Chrome traces parse (emits BENCH_obs.json)
+# validates the exported Chrome traces parse (emits BENCH_obs.json);
+# "spec" A/Bs speculative decoding (prompt-lookup drafts + k-token paged
+# verification) against sequential decode and asserts the templated k=4
+# speedup/accept-rate bars (emits BENCH_spec.json)
 SMOKE_MODULES = ("fig2", "theory", "logprob", "decode", "scaling", "sync",
-                 "serve_lat", "sentinel", "obs")
+                 "serve_lat", "sentinel", "obs", "spec")
+
+
+# One headline metric per legacy BENCH_*.json artifact (newer artifacts
+# carry an explicit "headline" block instead and need no entry here).
+_HEADLINE_PICKERS = {
+    "BENCH_decode.json": lambda d: {
+        "metric": "gather_over_ref_temp_max_ctx",
+        "value": d["gather_over_ref_temp"][
+            max(d["gather_over_ref_temp"], key=int)]},
+    "BENCH_serve.json": lambda d: {
+        "metric": "poisson_slo_tokens_per_s",
+        "value": d["poisson"]["slo"]["tokens_per_s"]},
+    "BENCH_obs.json": lambda d: {
+        "metric": "trace_overhead_pct",
+        "value": d["overhead"]["overhead_pct"]},
+}
+
+
+def write_summary(smoke: bool, path: str = "BENCH_summary.json") -> int:
+    """Aggregate one headline metric from every BENCH_*.json in cwd into
+    ``BENCH_summary.json`` — the single artifact a dashboard (or a human
+    diffing two CI runs) reads instead of N per-bench files. Artifacts
+    either carry their own ``headline`` block (the convention for new
+    benches) or get a picker above; files matching neither are listed
+    without a metric rather than dropped."""
+    headlines = {}
+    for fp in sorted(glob.glob("BENCH_*.json")):
+        if fp == path:
+            continue
+        try:
+            with open(fp) as f:
+                data = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            headlines[fp] = {"error": str(e)}
+            continue
+        if isinstance(data.get("headline"), dict) and data["headline"]:
+            headlines[fp] = data["headline"]
+        elif fp in _HEADLINE_PICKERS:
+            try:
+                headlines[fp] = _HEADLINE_PICKERS[fp](data)
+            except (KeyError, ValueError) as e:
+                headlines[fp] = {"error": f"picker failed: {e}"}
+        else:
+            headlines[fp] = {"metric": None,
+                             "note": "no headline block or picker"}
+    with open(path, "w") as f:
+        json.dump({"bench": "summary", "smoke": smoke,
+                   "headlines": headlines}, f, indent=1)
+    return len(headlines)
 
 
 def main() -> None:
@@ -92,6 +147,9 @@ def main() -> None:
             failures.append(name)
             print(f"# {name} FAILED:", flush=True)
             traceback.print_exc()
+    n = write_summary(bool(args.smoke))
+    print(f"# BENCH_summary.json aggregates {n} artifact headline(s)",
+          flush=True)
     print(f"# total {time.time()-t0:.1f}s; failures: {failures or 'none'}",
           flush=True)
     if failures:

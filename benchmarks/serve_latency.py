@@ -241,6 +241,50 @@ def run(smoke: bool = None) -> List[str]:
             # 3) the headline: shared prefixes must at least double
             #    effective prefill throughput at this prefix share
             assert reuse >= 2.0, f"{name}: prefill reuse {reuse:.2f}x < 2x"
+
+    # speculative decoding behind the front door: the same Poisson drive
+    # with spec_k=4 on a greedy profile (spec needs its own engine — one
+    # sampling profile per engine). The serving invariants must hold
+    # unchanged under draft/verify/rollback — admission reserves the full
+    # page budget, so completed == admitted even when rounds commit a
+    # variable number of tokens — and the accept rate must flow through
+    # stats() so /metrics exports it.
+    rl_spec = RLConfig(temperature=1.0, top_k=1, top_p=1.0,
+                       max_new_tokens=max_new, engine="continuous")
+    sp_spec = SamplingParams.from_rl(rl_spec)
+    sv = dataclasses.replace(serve, spec_k=4)
+    engine = build_engine(cfg, params, sv, rl=rl_spec,
+                          vocab_limit=cfg.vocab_size,
+                          key=jax.random.fold_in(key, 131))
+    engine.generate([Request(rid=10_000,
+                             prompt=prompts[0][:prefix_len + tail_len],
+                             params=sp_spec)])
+    engine.prefix_cache.clear()
+    spec_prompts = _make_prompts(n_poisson, prefix_len, tail_len, rng)
+    telemetry, admission = _drive(
+        engine, sv, _poisson_schedule(n_poisson, mean_gap, rng),
+        spec_prompts, sp_spec)
+    st = engine.stats()
+    assert st["completed"] == st["admitted"] == telemetry.completed + 1, \
+        (st, telemetry.completed)
+    cache_held = len({pg for ent in engine.prefix_cache._entries.values()
+                      for pg in ent.pages})
+    assert engine.free_pages + cache_held == engine.num_pages - 1, \
+        (engine.free_pages, cache_held, engine.num_pages)
+    assert st["spec_rounds"] + st["spec_fallback_chunks"] > 0, st
+    snap = telemetry.snapshot()
+    rows.append(f"serve_lat,poisson_spec,"
+                f"ttft_p50_ms={1e3 * snap['ttft_p50_s']:.1f},"
+                f"lat_p99_ms={1e3 * snap['latency_p99_s']:.1f},"
+                f"tok_s_slot={snap['tokens_per_s_per_slot']:.1f},"
+                f"accept_rate={st['accept_rate']:.2f},"
+                f"drafted={int(st['drafted_tokens_total'])}")
+    artifact["poisson_spec"] = {
+        "slo": snap, "rejected": dict(admission.rejected),
+        "spec": {k: st[k] for k in
+                 ("accept_rate", "draft_hit_rate", "drafted_tokens_total",
+                  "accepted_tokens_total", "spec_rounds",
+                  "spec_fallback_chunks", "admitted", "completed")}}
     try:
         with open(JSON_PATH, "w") as f:
             json.dump(artifact, f, indent=1)

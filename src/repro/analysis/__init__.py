@@ -9,11 +9,14 @@ from repro.analysis.core import (Finding, RepoContext, SourceFile,
                                  run_analysis, run_rules, save_baseline)
 from repro.analysis.rules import RULE_DOCS, default_rules
 from repro.analysis.sentinel import (RecompileSentinel, executable_bound,
-                                     pow2_bucket_count)
+                                     pow2_bucket_count,
+                                     spec_verify_executable_bound,
+                                     spec_verify_width_buckets)
 
 __all__ = [
     "Finding", "RepoContext", "SourceFile", "collect_files",
     "load_baseline", "run_analysis", "run_rules", "save_baseline",
     "RULE_DOCS", "default_rules",
     "RecompileSentinel", "executable_bound", "pow2_bucket_count",
+    "spec_verify_width_buckets", "spec_verify_executable_bound",
 ]

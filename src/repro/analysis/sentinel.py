@@ -131,6 +131,40 @@ def executable_bound(max_pages: int, phases: int = 3, slack: int = 4) -> int:
     return phases * pow2_bucket_count(max_pages) + slack
 
 
+def spec_verify_width_buckets(spec_k: int) -> int:
+    """Distinct jitted verify widths speculative decoding can request.
+    Mirrors the width computation in ``_spec_round``
+    (sampling/continuous.py): the window holds 1 pending token plus
+    0..spec_k drafts, bucketed through the same pow2 rounding as
+    `_live_width` with a floor of 2 (width-1 windows would route to the
+    decode kernel, which has no query-recording path). Cross-checked
+    against ``repro.sampling.spec.verify_width_buckets`` in tests.
+    """
+    widths = set()
+    for k in range(spec_k + 1):
+        need = 1 + k
+        w = 1
+        while w < need:
+            w *= 2
+        widths.add(max(2, min(w, spec_k + 1)))
+    return len(widths)
+
+
+def spec_verify_executable_bound(spec_k: int, max_pages: int) -> int:
+    """Analytic ceiling on the spec engine's jitted round executables:
+    verify compiles (``_verify_chunk_jit``) key on (verify width bucket,
+    pow2 block-table width bucket), and no-draft fallback chunks
+    (``_spec_decode_chunk_jit``) add one more family over the table-width
+    buckets. Varying per-round acceptance lengths change neither key, so
+    a steady spec-decode epoch compiles nothing new — the property
+    tests/test_recompile.py asserts with this bound.
+    """
+    if spec_k <= 0:
+        return 0
+    return ((spec_verify_width_buckets(spec_k) + 1)
+            * pow2_bucket_count(max_pages))
+
+
 def prefill_executable_bound(prefill_chunk: int, max_pages: int) -> int:
     """Analytic ceiling on jitted prefill-chunk executables
     (``_prefill_chunk_jit``): each compile is keyed by
@@ -146,4 +180,5 @@ def prefill_executable_bound(prefill_chunk: int, max_pages: int) -> int:
 
 
 __all__ = ["RecompileSentinel", "pow2_bucket_count", "executable_bound",
-           "prefill_executable_bound", "install_metrics_listener"]
+           "prefill_executable_bound", "spec_verify_width_buckets",
+           "spec_verify_executable_bound", "install_metrics_listener"]

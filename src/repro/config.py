@@ -276,6 +276,10 @@ class HeteroConfig:
     # paged_attn_impl vocabulary; None keeps the arch default). Lets the
     # hetero sweeps A/B the in-place kernel against the gather path.
     paged_attn_impl: Optional[str] = None
+    # Sampler-side speculative decoding (continuous engine only): draft
+    # cap per verification round; 0 = off. Distribution-preserving, so
+    # table2-style runs can A/B it purely as a decode-latency lever.
+    spec_k: int = 0
 
 
 @dataclass(frozen=True)
@@ -307,6 +311,15 @@ class ServeConfig:
     prefix_cache_entries: int = 64
     mesh: str = "1x1"                # serve mesh DxM (TrainConfig.mesh conv.)
     paged_attn_impl: Optional[str] = None   # ModelConfig override (None=keep)
+    # speculative decoding (continuous engine only): drafts per
+    # verification round (0 = off). Acceptance preserves the sampled
+    # distribution exactly; greedy stays bit-identical to spec off.
+    spec_k: int = 0
+    spec_ngram_max: int = 3          # prompt-lookup suffix n-gram (longest)
+    spec_ngram_min: int = 1          # ... shortest suffix tried
+    # rescore acceptance through one fused paged_prefill_layers launch
+    # per round and export max |fused - in-forward| as a drift gauge
+    spec_rescore: bool = True
     # front door -----------------------------------------------------------
     host: str = "127.0.0.1"
     port: int = 8100
@@ -334,6 +347,13 @@ class ServeConfig:
         if self.queue_overcommit < 1.0:
             raise ValueError("queue_overcommit < 1 would reject requests "
                              "an idle pool could serve")
+        if self.spec_k < 0:
+            raise ValueError("spec_k must be >= 0 (0 = speculation off)")
+        if self.spec_k > 0 and self.engine != "continuous":
+            raise ValueError("speculative decoding (spec_k > 0) needs the "
+                             "continuous engine")
+        if not 1 <= self.spec_ngram_min <= self.spec_ngram_max:
+            raise ValueError("need 1 <= spec_ngram_min <= spec_ngram_max")
 
     # derived --------------------------------------------------------------
     @property

@@ -62,7 +62,8 @@ class SamplerNode:
                  logprob_impl: str = "fused",
                  paged_attn_impl: Optional[str] = None,
                  plan: Optional[ExecutionPlan] = None,
-                 serve: Optional[ServeConfig] = None) -> None:
+                 serve: Optional[ServeConfig] = None,
+                 spec_k: Optional[int] = None) -> None:
         self.sid = sid
         # sampler-side paged-decode backend (explicit arg beats the
         # HeteroConfig knob beats the arch default) — the A/B lever for
@@ -94,6 +95,13 @@ class SamplerNode:
         # a ServeConfig — an explicit one, or a default sized to the
         # pipeline's rollout shape
         self.serve_cfg = serve
+        # speculative decoding opt-in (explicit arg beats the HeteroConfig
+        # knob): hetero samplers are exactly the GEPO setting spec decode
+        # targets — tokens drafted against a stale policy are verified by
+        # the *current* local policy, so accepted tokens carry its logps
+        # and the importance-weight contract is untouched. Applied to the
+        # default ServeConfig below; an explicit `serve` keeps its own.
+        self.spec_k = hcfg.spec_k if spec_k is None else spec_k
         self._gen_engine = None
         self._engine_tp = -1
         # backend of the App. B.1 recompute — follows the learner's
@@ -139,6 +147,15 @@ class SamplerNode:
         self._g_version = m.gauge(
             "sampler_policy_version", "policy version this node holds",
             sampler=sid)
+        self._g_accept = m.gauge(
+            "sampler_accept_rate",
+            "speculative-decode draft acceptance rate of this node",
+            sampler=sid)
+        self._m_drafted = m.counter(
+            "sampler_drafted_tokens_total",
+            "draft tokens proposed by this node's engine", sampler=sid)
+        self._drafted_seen = 0   # engine stats are cumulative; counter
+        #                          ingests per-batch deltas
 
     @property
     def tokens_per_s(self) -> float:
@@ -160,7 +177,7 @@ class SamplerNode:
                 serve = self.serve_cfg or ServeConfig(
                     engine=self.engine,
                     max_total_tokens=tp + self.rl.max_new_tokens,
-                    num_slots=min(b, 8))
+                    num_slots=min(b, 8), spec_k=self.spec_k)
                 if serve.max_total_tokens < tp + self.rl.max_new_tokens:
                     raise ValueError(
                         f"ServeConfig.max_total_tokens="
@@ -206,6 +223,13 @@ class SamplerNode:
                 self.gen_seconds += dt
             if "stats" in roll:
                 self.engine_stats = dict(roll["stats"])
+            if self.spec_k > 0 and self.engine_stats:
+                self._g_accept.set(
+                    self.engine_stats.get("accept_rate", 0.0))
+                drafted = int(
+                    self.engine_stats.get("drafted_tokens_total", 0))
+                self._m_drafted.inc(drafted - self._drafted_seen)
+                self._drafted_seen = drafted
         rewards = score_rollouts(self.task, self.tok, req.problems,
                                  np.asarray(roll["completions"]),
                                  req.group_size)

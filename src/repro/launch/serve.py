@@ -49,7 +49,9 @@ def parse_serve_config(args: argparse.Namespace) -> ServeConfig:
         num_pages=args.num_pages, prefix_cache=not args.no_prefix_cache,
         mesh=args.mesh, paged_attn_impl=args.paged_attn_impl,
         host=args.host, port=args.port, max_queue=args.max_queue,
-        default_deadline_s=args.deadline_s, seed=args.seed)
+        default_deadline_s=args.deadline_s, seed=args.seed,
+        spec_k=args.spec_k, spec_ngram_max=args.spec_ngram,
+        spec_rescore=not args.no_spec_rescore)
 
 
 def main() -> None:
@@ -79,6 +81,15 @@ def main() -> None:
                          "parallel over model)")
     ap.add_argument("--paged-attn-impl", default=None,
                     choices=("auto", "pallas", "ref", "gather"))
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: drafts per verification "
+                         "round (0 = off; continuous engine only)")
+    ap.add_argument("--spec-ngram", type=int, default=3,
+                    help="longest suffix n-gram the prompt-lookup "
+                         "drafter matches")
+    ap.add_argument("--no-spec-rescore", action="store_true",
+                    help="skip the fused-layers acceptance rescore "
+                         "(drops the drift gauge, saves one launch/round)")
     ap.add_argument("--host", default="127.0.0.1")
     ap.add_argument("--port", type=int, default=8100)
     ap.add_argument("--max-queue", type=int, default=256)

@@ -42,7 +42,8 @@ def _project_qkv(cfg: ModelConfig, p: Dict, xq: jax.Array,
 
 def _self_attn(cfg: ModelConfig, p: Dict, x: jax.Array, *, kind: str,
                positions: jax.Array, cache: Optional[Dict], pos,
-               bidir: bool = False, page_table: Optional[jax.Array] = None):
+               bidir: bool = False, page_table: Optional[jax.Array] = None,
+               record: bool = False):
     """Self-attention sub-layer body (input already normed).
 
     Returns (out, new_cache). In decode mode (pos is not None) x is
@@ -50,6 +51,12 @@ def _self_attn(cfg: ModelConfig, p: Dict, x: jax.Array, *, kind: str,
     cache is *paged* (holds "kp"/"vp" page pools and ``page_table`` maps
     (slot, logical_page) -> physical page), both chunked prefill and
     decode go through the paged scatter/gather path instead.
+
+    ``record=True`` (paged chunked-prefill path only — the speculative
+    verification forward) returns a third element: the post-rope queries
+    and the per-layer attention output, both (B, Sq, Hq, Dh), so the
+    caller can replay all layers' attention through one fused
+    ``paged_prefill_layers`` launch.
     """
     q, k, v = _project_qkv(cfg, p, x, x)
     q = rope(q, positions, cfg.rope_theta)
@@ -102,6 +109,9 @@ def _self_attn(cfg: ModelConfig, p: Dict, x: jax.Array, *, kind: str,
                               softcap=cfg.attn_softcap,
                               impl=cfg.paged_attn_impl,
                               attn_impl=cfg.attn_impl, chunk=cfg.attn_chunk)
+            if record:
+                return (o.reshape(b, sq, -1) @ p["wo"], {"kp": kp, "vp": vp},
+                        {"q": q, "o": o})
         return o.reshape(b, sq, -1) @ p["wo"], {"kp": kp, "vp": vp}
 
     ring = (cfg.local_ring_kv and kind == LOCAL)
@@ -181,16 +191,21 @@ def _ffn(cfg: ModelConfig, kind: str, p: Dict, x: jax.Array,
 
 def _apply_layer(cfg: ModelConfig, idx_in_block: int, p: Dict, x: jax.Array,
                  *, positions, memory, cache, pos, aux,
-                 encoder: bool = False, page_table=None):
+                 encoder: bool = False, page_table=None, record: bool = False):
     kind = ATTN if encoder else cfg.block_pattern[idx_in_block]
     ffn_kind = MLP if encoder else cfg.ffn_kind(idx_in_block)
     new_cache: Dict[str, Any] = {}
+    tape = None
 
     h = rmsnorm(x, p["norm"], cfg.norm_eps)
     if kind in (ATTN, LOCAL):
-        o, c = _self_attn(cfg, p["attn"], h, kind=kind, positions=positions,
-                          cache=None if cache is None else cache.get("self"),
-                          pos=pos, bidir=encoder, page_table=page_table)
+        res = _self_attn(cfg, p["attn"], h, kind=kind, positions=positions,
+                         cache=None if cache is None else cache.get("self"),
+                         pos=pos, bidir=encoder, page_table=page_table,
+                         record=record)
+        o, c = res[0], res[1]
+        if record:
+            tape = res[2]
         x = x + o
         if c is not None:
             new_cache["self"] = c
@@ -216,6 +231,12 @@ def _apply_layer(cfg: ModelConfig, idx_in_block: int, p: Dict, x: jax.Array,
         raise ValueError(kind)
 
     x, aux = _ffn(cfg, ffn_kind, p, x, aux)
+    if record:
+        if tape is None:
+            raise ValueError(
+                f"record_queries needs every layer on the paged attention "
+                f"path; layer kind {kind!r} is not")
+        return x, new_cache, aux, tape
     return x, new_cache, aux
 
 
@@ -242,9 +263,13 @@ def _aux_init(cfg: ModelConfig) -> Dict[str, jax.Array]:
 
 def _run_blocks(cfg: ModelConfig, blocks: Dict, x: jax.Array, *,
                 positions, memory, cache, pos, encoder=False,
-                page_table=None):
+                page_table=None, record=False):
     """Scan super-blocks. cache (if given) is a pytree stacked on axis 0
-    matching ``blocks``; returns (x, new_cache, aux)."""
+    matching ``blocks``; returns (x, new_cache, aux). With ``record``
+    (paged-prefill path only) aux additionally carries ``q_tape`` /
+    ``o_tape`` — per-layer post-rope queries and attention outputs,
+    (L, B, S, Hq, Dh) with L enumerated block-major (the same order
+    ``kernels.ops._fold_layers`` folds pool leaves)."""
     aux0 = {} if encoder else _aux_init(cfg)
     n_layers = cfg.encoder_layers if encoder else len(cfg.block_pattern)
 
@@ -253,17 +278,27 @@ def _run_blocks(cfg: ModelConfig, blocks: Dict, x: jax.Array, *,
         x = _constrain(cfg, x)
         bp, bc = xs
         new_bc = {}
+        tapes = []
         for i in range(n_layers if encoder else len(cfg.block_pattern)):
             key = f"layer_{i}" if not encoder else "layer"
             lp = bp[key] if not encoder else bp
             lc = None if bc is None else bc.get(f"layer_{i}")
-            x, nc, aux = _apply_layer(cfg, i, lp, x, positions=positions,
-                                      memory=memory, cache=lc, pos=pos,
-                                      aux=aux, encoder=encoder,
-                                      page_table=page_table)
+            out = _apply_layer(cfg, i, lp, x, positions=positions,
+                               memory=memory, cache=lc, pos=pos,
+                               aux=aux, encoder=encoder,
+                               page_table=page_table, record=record)
+            x, nc, aux = out[0], out[1], out[2]
+            if record:
+                tapes.append(out[3])
             if bc is not None:
                 new_bc[f"layer_{i}"] = nc
-        return (x, aux), (new_bc if bc is not None else 0)
+        ys = new_bc if bc is not None else 0
+        if record:
+            # stack the period's layers -> (P, B, S, Hq, Dh); the scan
+            # stacks blocks in front -> (nb, P, ...)
+            ys = (ys, {k: jnp.stack([t[k] for t in tapes])
+                       for k in ("q", "o")})
+        return (x, aux), ys
 
     if encoder:
         # encoder blocks are a single stacked layer dict
@@ -278,7 +313,14 @@ def _run_blocks(cfg: ModelConfig, blocks: Dict, x: jax.Array, *,
         return x, None, aux
 
     fn = jax.checkpoint(body) if cfg.remat else body
-    (x, aux), new_cache = jax.lax.scan(fn, (x, aux0), (blocks, cache))
+    (x, aux), ys = jax.lax.scan(fn, (x, aux0), (blocks, cache))
+    if record:
+        new_cache, tape = ys
+        for k, name in (("q", "q_tape"), ("o", "o_tape")):
+            t = tape[k]                      # (nb, P, B, S, Hq, Dh)
+            aux[name] = t.reshape((-1,) + t.shape[2:])
+    else:
+        new_cache = ys
     return x, (new_cache if cache is not None else None), aux
 
 
@@ -324,6 +366,7 @@ def forward(cfg: ModelConfig, params: Dict, tokens: jax.Array, *,
             positions: Optional[jax.Array] = None,
             cache: Optional[Dict] = None,
             page_table: Optional[jax.Array] = None,
+            record_queries: bool = False,
             ) -> Tuple[jax.Array, Optional[Dict], Dict]:
     """Full-sequence forward (training / prefill).
 
@@ -332,6 +375,12 @@ def forward(cfg: ModelConfig, params: Dict, tokens: jax.Array, *,
     cache (page pools from ``repro.sampling.paged_cache``) additionally
     needs ``page_table`` (B, pages_per_slot) and explicit ``positions``
     for chunked prefill at an offset.
+
+    ``record_queries`` (paged-cache forwards only) adds ``q_tape`` /
+    ``o_tape`` — per-layer post-rope queries and per-layer attention
+    outputs, (L, B, S, Hq, Dh) — to the returned aux dict, so a
+    speculative verifier can rescore acceptance through one
+    ``paged_prefill_layers`` launch instead of L.
     """
     b, s = tokens.shape
     if positions is None:
@@ -340,7 +389,8 @@ def forward(cfg: ModelConfig, params: Dict, tokens: jax.Array, *,
     x, new_cache, aux = _run_blocks(cfg, params["blocks"], x,
                                     positions=positions, memory=memory,
                                     cache=cache, pos=None,
-                                    page_table=page_table)
+                                    page_table=page_table,
+                                    record=record_queries)
     return _logits(cfg, params, x), new_cache, aux
 
 

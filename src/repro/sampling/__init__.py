@@ -7,10 +7,11 @@ from repro.sampling.paged_cache import (PageAllocator, init_paged_pool,
 from repro.sampling.prefix_cache import PrefixCache
 from repro.sampling.sample import filter_logits, sample_token, sample_token_rows
 from repro.sampling.scheduler import ContinuousScheduler, GenRequest
+from repro.sampling.spec import DraftProposer, NGramDrafter
 
 __all__ = ["generate", "generate_continuous", "token_logps", "filter_logits",
            "sample_token", "sample_token_rows", "PageAllocator",
            "init_paged_pool", "paged_cache_supported", "pages_for",
            "ContinuousScheduler", "GenRequest", "ContinuousEngine",
            "StaticEngine", "build_engine", "rollout_from_results",
-           "PrefixCache"]
+           "PrefixCache", "DraftProposer", "NGramDrafter"]

@@ -42,6 +42,8 @@ from repro.sampling.prefix_cache import PrefixCache
 from repro.sampling.sample import mask_vocab, model_logp, sample_token_rows
 from repro.sampling.scheduler import (DECODE, PREFILL, ContinuousScheduler,
                                       GenRequest)
+from repro.sampling.spec import (DraftProposer, NGramDrafter, accept_drafts,
+                                 fused_rescore_diff)
 from repro.serving.api import (GenerationResult, Request, SamplingParams,
                                TokenEvent)
 
@@ -126,6 +128,126 @@ def _decode_chunk_jit(cfg: ModelConfig, rl: RLConfig, params, pool,
     return toks, lps, last, pool                    # toks (K, num_slots)
 
 
+@functools.partial(jax.jit, static_argnames=("cfg", "rl", "vocab_limit",
+                                             "fused", "plan"),
+                   donate_argnums=(3,))
+def _verify_chunk_jit(cfg: ModelConfig, rl: RLConfig, params, pool,
+                      page_table, packed, req_keys, max_new_v,
+                      vocab_limit: int, fused: bool, plan=None):
+    """One speculative round over every slot in one executable: score the
+    per-slot window ``[pending, d_1..d_k, pad]`` in ONE prefill-shaped
+    target forward through the ``paged_prefill`` dispatcher (positions
+    are each slot's contiguous ``pos0 + [0, W)``), then accept the
+    longest draft prefix whose tokens match the engine's replayed draws
+    (``repro.sampling.spec.accept_drafts`` — distribution preserved
+    exactly, greedy bit-identical to the non-speculative path).
+
+    ``packed`` (B, W+4) int32 carries everything that changes per round
+    in ONE host->device transfer — columns ``[window(W), draft_len,
+    gen_base, pos0, active]`` — because this dispatch sits on the decode
+    critical path and a handful of small device_puts per round was
+    measurably the dominant cost. ``req_keys``/``max_new_v`` change only
+    at admission and ride a cached device array.
+
+    Every window column scatters K/V at its contiguous position —
+    rejected/padded columns land on the slot's own reserved-but-unread
+    page slots and are overwritten before any later query can attend
+    them (the append-only rollback: rewinding positions, no page
+    copies). Inactive slots run at positions ``[0, W)`` (pos0 = 0)
+    against the scratch page, the prefill-shaped twin of the decode
+    chunk's dead slots. With ``fused`` the forward also records
+    per-layer queries and attention outputs, and the acceptance rescore
+    replays all layers through one ``paged_prefill_layers`` launch — the
+    fused-layer kernels' consumer — returning max |fused − in-forward|
+    as a bit-exactness gauge.
+
+    Returns (iout (B, W+2) int32 = [toks(W), n_emit, n_acc],
+    fout (B, W+1) f32 = [lps(W), rescore_diff], pool) — two packed
+    device->host transfers on the result side for the same reason.
+    """
+    if plan is not None:
+        params = plan.constrain_params(cfg, params)
+        pool = plan.constrain_cache(cfg, pool)
+    b = packed.shape[0]
+    w = packed.shape[1] - 4
+    window_tokens = packed[:, :w]
+    draft_len, gen_base, pos0 = packed[:, w], packed[:, w + 1], \
+        packed[:, w + 2]
+    active = packed[:, w + 3].astype(bool)
+    positions = pos0[:, None] + jnp.arange(w, dtype=jnp.int32)[None, :]
+    logits, pool, aux = forward(cfg, params, window_tokens,
+                                positions=positions, cache=pool,
+                                page_table=page_table,
+                                record_queries=fused)
+    toks, lps, n_emit, n_acc = accept_drafts(
+        logits, window_tokens, draft_len, active, req_keys, gen_base,
+        max_new_v, temperature=rl.temperature, top_k=rl.top_k,
+        top_p=rl.top_p, vocab_limit=vocab_limit)
+    diff = jnp.float32(0.0)
+    if fused:
+        diff = fused_rescore_diff(cfg, pool, aux["q_tape"], aux["o_tape"],
+                                  page_table, positions)
+    iout = jnp.concatenate([toks, n_emit[:, None], n_acc[:, None]], axis=1)
+    fout = jnp.concatenate([lps, jnp.full((b, 1), diff, jnp.float32)],
+                           axis=1)
+    return iout, fout, pool
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "rl", "vocab_limit",
+                                             "sync_every", "plan"),
+                   donate_argnums=(3,))
+def _spec_decode_chunk_jit(cfg: ModelConfig, rl: RLConfig, params, pool,
+                           page_table, pending, pos0, active, req_keys,
+                           gen_base, max_new_v, vocab_limit: int,
+                           sync_every: int, plan=None):
+    """Sequential decode chunk in the *pending-token* state convention —
+    the spec engine's fallback when no slot drafted anything this round
+    (cold history, or acceptance-gated drafting backed off on an
+    incompressible stream). The decode-chunk twin of ``_decode_chunk_jit``
+    shifted by one: each step scatters the carried token's K/V and draws
+    the next from the resulting logits, so no ``last``-logits state is
+    needed and the final draw is left pending for the next round. Draw
+    ``i`` uses ``fold_in(req_keys, gen_base + 1 + i)`` — the same
+    per-request counter stream as verification, so tokens stay
+    bit-identical whichever path emits them.
+    """
+    if plan is not None:
+        params = plan.constrain_params(cfg, params)
+        pool = plan.constrain_cache(cfg, pool)
+    page_size = jax.tree_util.tree_leaves(pool)[0].shape[2]
+    oob_pos = jnp.int32(page_table.shape[1] * page_size)
+
+    def step(carry, i):
+        pool, tok, done = carry
+        gi = gen_base + 1 + i                    # gen index of this draw
+        dead = done | (gi >= max_new_v)
+        step_pos = jnp.where(dead, oob_pos, pos0 + i)
+        logits, pool = decode_step(cfg, params, pool, tok, step_pos,
+                                   page_table=page_table)
+        kt = jax.vmap(jax.random.fold_in)(req_keys, gi)
+        nt, _, _ = sample_token_rows(kt, mask_vocab(logits, vocab_limit),
+                                     temperature=rl.temperature,
+                                     top_k=rl.top_k, top_p=rl.top_p)
+        lp = jnp.where(dead, 0.0, model_logp(logits, nt))
+        nt = jnp.where(dead, PAD, nt)
+        done = done | (nt == EOS)
+        return (pool, nt, done), (nt, lp)
+
+    (pool, _, _), (toks, lps) = jax.lax.scan(
+        step, (pool, pending, ~active), jnp.arange(sync_every))
+    return toks, lps, pool                       # toks (K, num_slots)
+
+
+# acceptance-EMA drafting gate: below _SPEC_EMA_MIN the drafter has
+# demonstrably nothing to offer this request (incompressible stream) and
+# proposing more drafts only pays verification width for nothing; a
+# backed-off request re-probes every _SPEC_PROBE_EVERY rounds in case
+# the stream turns templated (e.g. the model falls into a cycle)
+_SPEC_EMA_MIN = 0.25
+_SPEC_EMA_DECAY = 0.5
+_SPEC_PROBE_EVERY = 4
+
+
 def _live_width(need_pages: int, cap: int) -> int:
     """Block-table width actually handed to the jitted chunk fns: the
     live-page high-water mark rounded up to a power of two (so widths
@@ -177,6 +299,11 @@ class ContinuousEngine:
                  plan=None,
                  prefix_cache: bool = True,
                  prefix_cache_entries: int = 64,
+                 spec_k: int = 0,
+                 drafter: Optional[DraftProposer] = None,
+                 spec_ngram_max: int = 3,
+                 spec_ngram_min: int = 1,
+                 spec_rescore: bool = True,
                  key: Optional[jax.Array] = None) -> None:
         if not paged_cache_supported(cfg):
             raise ValueError(f"{cfg.name}: continuous engine needs an "
@@ -203,6 +330,14 @@ class ContinuousEngine:
                                          page_size, allocator,
                                          prefix_cache=self.prefix_cache)
         self.pool = init_paged_pool(cfg, self.num_pages, page_size)
+        if spec_k < 0:
+            raise ValueError(f"spec_k must be >= 0, got {spec_k}")
+        self.spec_k = spec_k
+        self.spec_rescore = spec_rescore
+        self.drafter: Optional[DraftProposer] = drafter
+        if spec_k > 0 and self.drafter is None:
+            self.drafter = NGramDrafter(max_ngram=spec_ngram_max,
+                                        min_ngram=spec_ngram_min)
         self.key = key if key is not None else jax.random.PRNGKey(0)
         self._last = jnp.zeros((num_slots, cfg.padded_vocab), jnp.float32)
         self._pos = np.zeros((num_slots,), np.int32)
@@ -235,6 +370,27 @@ class ContinuousEngine:
         self._g_prefix_reused = m.gauge(
             "engine_prefix_tokens_reused",
             "prompt tokens served from cached prefix pages")
+        self._m_spec_rounds = m.counter(
+            "engine_spec_rounds_total", "speculative verification rounds")
+        self._m_spec_drafted = m.counter(
+            "engine_spec_drafted_total", "draft tokens proposed")
+        self._m_spec_accepted = m.counter(
+            "engine_spec_accepted_total", "draft tokens accepted")
+        self._g_accept_rate = m.gauge(
+            "engine_spec_accept_rate",
+            "accepted / drafted tokens (cumulative)")
+        self._g_draft_hit = m.gauge(
+            "engine_spec_draft_hit_rate",
+            "slot-rounds where the drafter proposed anything (cumulative)")
+        self._g_rescore_diff = m.gauge(
+            "engine_spec_rescore_max_diff",
+            "max |fused-layers rescore - in-forward attention| last round")
+        self._rescore_max_diff = 0.0
+        # per-request acceptance EMA ([ema, rounds_since_draft]) — gates
+        # drafting off on incompressible streams (periodic re-probe)
+        self._spec_ema: Dict[int, List[float]] = {}
+        # host-compare cache of small device-resident dispatch args
+        self._dev_cache: Dict[str, tuple] = {}
 
     # ------------------------------------------------------------------
     @property
@@ -265,6 +421,12 @@ class ContinuousEngine:
         out: Dict[str, float] = dict(self.sched.stats)
         out["slot_utilization"] = self.sched.slot_utilization()
         out["free_pages"] = self.free_pages
+        # speculative-decode surface (flows to /metrics via stats())
+        out["accept_rate"] = (out["accepted_tokens_total"]
+                              / max(out["drafted_tokens_total"], 1))
+        out["draft_hit_rate"] = (out["draft_hits"]
+                                 / max(out["spec_slot_rounds"], 1))
+        out["spec_rescore_max_diff"] = self._rescore_max_diff
         if self.prefix_cache is not None:
             for k, v in self.prefix_cache.stats.items():
                 out[f"prefix_cache_{k}"] = v
@@ -288,7 +450,8 @@ class ContinuousEngine:
         self.sched.submit(GenRequest(
             rid=req.rid, prompt=req.prompt,
             max_new=req.params.max_new_tokens, priority=req.priority,
-            deadline_s=req.deadline_s, arrival_s=req.arrival_s))
+            deadline_s=req.deadline_s, arrival_s=req.arrival_s,
+            spec_ok=req.params.spec))
 
     def _finish_result(self, r: GenRequest) -> GenerationResult:
         res = GenerationResult(
@@ -399,6 +562,10 @@ class ContinuousEngine:
         if not dec:
             self._publish_gauges()
             return events
+        if self.spec_k > 0:
+            self._spec_round(dec, now, events)
+            self._publish_gauges()
+            return events
         # non-decoding slots (empty, or mid-prefill) must scatter their
         # dead PAD writes into the scratch page — NOT position 0 of pages
         # a prefilling request has already filled. The table is narrowed
@@ -458,6 +625,234 @@ class ContinuousEngine:
                                          finish_reason=reason))
         self._publish_gauges()
         return events
+
+    # ------------------------------------------------------------------
+    def _dev(self, name: str, arr: np.ndarray) -> jax.Array:
+        """Cached device mirror of a small host array: re-upload only
+        when the host copy changed. The compare costs microseconds; the
+        device_puts it avoids were measurably milliseconds per verify
+        round (block table, RNG keys and budgets change only at
+        admission, not per round)."""
+        ent = self._dev_cache.get(name)
+        if ent is not None and ent[0].shape == arr.shape \
+                and np.array_equal(ent[0], arr):
+            return ent[1]
+        dev = jnp.asarray(arr)
+        self._dev_cache[name] = (arr.copy(), dev)
+        return dev
+
+    def _spec_round(self, dec: List[GenRequest], now: float,
+                    events: List[TokenEvent]) -> None:
+        """One speculative round replacing the decode chunk: draft on
+        host (prompt-lookup over each slot's own history), verify all
+        slots' windows in one prefill-shaped target forward, commit the
+        accepted prefix + the replayed draw, rewind the rest by position
+        (append-only pool — no page copies, no allocator traffic).
+
+        The *pending* token (window column 0) is the last committed
+        token whose K/V is not yet scattered — right after prefill that
+        is the last prompt token (its rewrite is bit-identical, k/v are
+        per-token functions of (token, position)), so freshly-admitted
+        slots need no separate seeding dispatch and draw generation
+        index 0 through the same replayed stream.
+
+        Drafting is gated per request by an acceptance EMA: once a
+        request's stream proves incompressible the drafter is switched
+        off for it (with a periodic re-probe), and rounds where *no*
+        slot drafts fall back to a sequential multi-step chunk
+        (``_spec_fallback_chunk``) — the honest ~1x floor instead of a
+        one-token-per-forward collapse.
+        """
+        sched = self.sched
+        ns = self.num_slots
+        per_slot: Dict[int, tuple] = {}
+        max_k = 0
+        for r in dec:
+            pending = r.tokens[-1] if r.tokens else int(r.prompt[-1])
+            ke = min(self.spec_k, r.max_new - r.gen_count - 1) \
+                if r.spec_ok else 0
+            st = self._spec_ema.setdefault(r.rid, [1.0, 0])
+            if ke > 0 and st[0] < _SPEC_EMA_MIN:
+                st[1] += 1
+                if st[1] < _SPEC_PROBE_EVERY:
+                    ke = 0                      # backed off; wait to probe
+                else:
+                    st[1] = 0                   # probe round: draft again
+            d = np.zeros((0,), np.int32)
+            if ke > 0:
+                hist = np.concatenate(
+                    [r.prompt, np.asarray(r.tokens, np.int32)])
+                d = np.asarray(self.drafter.propose(hist, ke),
+                               np.int32)[:ke]
+            per_slot[r.slot] = (pending, d)
+            max_k = max(max_k, len(d))
+        if max_k == 0:
+            # nothing drafted anywhere (cold histories, opted-out
+            # requests, or EMA-gated incompressible streams): run a
+            # sequential decode chunk instead of a width-2 verify that
+            # would emit one token per forward
+            self._spec_fallback_chunk(dec, now, events, per_slot)
+            return
+        # pow2-bucketed verification width (floor 2 keeps the window on
+        # the prefill-shaped recording path) — O(log spec_k) executables.
+        # Everything that varies per round rides ONE packed int32 array:
+        # [window(W), draft_len, gen_base, pos0, active] per row.
+        w = max(2, _live_width(1 + max_k, self.spec_k + 1))
+        packed = np.zeros((ns, w + 4), np.int32)
+        packed[:, :w] = PAD
+        for r in dec:
+            s = r.slot
+            pending, d = per_slot[s]
+            packed[s, 0] = pending
+            packed[s, 1:1 + len(d)] = d
+            packed[s, w] = len(d)
+            packed[s, w + 1] = r.gen_count - 1           # gen_base
+            packed[s, w + 2] = r.prompt_len + r.gen_count - 1   # pos0
+            packed[s, w + 3] = 1                         # active
+        width = _live_width(
+            pages_for(int(packed[:, w + 2].max()) + w, self.page_size),
+            self.pages_per_slot)
+        bt = sched.block_table[:, :width].copy()
+        bt[~self._active] = SCRATCH_PAGE
+        with self._tr.span("verify", track="engine", slots=len(dec),
+                           window=w, width=width):
+            iout, fout, self.pool = _verify_chunk_jit(
+                self.cfg, self.rl, self.params, self.pool,
+                self._dev("bt.verify", bt), jnp.asarray(packed),
+                self._dev("req_keys", self._req_keys),
+                self._dev("max_new", self._max_new),
+                self.vocab_limit, self.spec_rescore, plan=self.plan)
+        sched.stats["decode_steps"] += 1
+        sched.stats["spec_rounds"] += 1
+        self._m_decode_steps.inc(1)
+        # two deliberate syncs per verify round (packed int/f32 results),
+        # the decode chunk's twin
+        io = np.asarray(iout)                              # noqa: RA003
+        fo = np.asarray(fout)                              # noqa: RA003
+        tok_np, ne, na = io[:, :w], io[:, w], io[:, w + 1]
+        lp_np = fo[:, :w]
+        if self.spec_rescore:
+            self._rescore_max_diff = max(self._rescore_max_diff,
+                                         float(fo[0, w]))
+        drafted = accepted = hits = 0
+        for r in dec:
+            s = r.slot
+            dl = len(per_slot[s][1])
+            drafted += dl
+            accepted += int(na[s])
+            hits += int(dl > 0)
+            if dl > 0:
+                st = self._spec_ema[r.rid]
+                st[0] = (_SPEC_EMA_DECAY * st[0]
+                         + (1.0 - _SPEC_EMA_DECAY) * int(na[s]) / dl)
+            sched.stats["spec_slot_rounds"] += 1
+            sched.stats["decode_slot_steps"] += 1
+            for j in range(int(ne[s])):
+                t = int(tok_np[s, j])
+                r.tokens.append(t)
+                r.logps.append(float(lp_np[s, j]))
+                if r.gen_count == 1:
+                    r.t_first_token = now
+                events.append(TokenEvent(rid=r.rid, token=t,
+                                         logp=r.logps[-1],
+                                         index=r.gen_count - 1))
+            self._pos[s] = r.next_pos
+            self._gen[s] = r.gen_count
+            reason = ""
+            if r.tokens and r.tokens[-1] == EOS:
+                reason = "eos"
+            elif r.gen_count >= r.max_new:
+                reason = "length"
+            if reason:
+                self._active[s] = False
+                self._spec_ema.pop(r.rid, None)
+                sched.finish(r, reason, now)
+                self._finish_result(r)
+                events.append(TokenEvent(rid=r.rid, token=-1, logp=0.0,
+                                         index=r.gen_count, finished=True,
+                                         finish_reason=reason))
+        sched.stats["drafted_tokens_total"] += drafted
+        sched.stats["accepted_tokens_total"] += accepted
+        sched.stats["draft_hits"] += hits
+        if obs.metrics.enabled:
+            st = sched.stats
+            self._m_spec_rounds.inc()
+            self._m_spec_drafted.inc(drafted)
+            self._m_spec_accepted.inc(accepted)
+            self._g_accept_rate.set(st["accepted_tokens_total"]
+                                    / max(st["drafted_tokens_total"], 1))
+            self._g_draft_hit.set(st["draft_hits"]
+                                  / max(st["spec_slot_rounds"], 1))
+            self._g_rescore_diff.set(self._rescore_max_diff)
+
+    def _spec_fallback_chunk(self, dec: List[GenRequest], now: float,
+                             events: List[TokenEvent],
+                             per_slot: Dict[int, tuple]) -> None:
+        """Sequential multi-step chunk for no-draft rounds, in the
+        pending-token convention (``_spec_decode_chunk_jit``). Tokens and
+        logps are bit-identical to what the verify path would emit — the
+        same per-request counter stream drives every draw and K/V lands
+        at the same absolute positions — so the engine can switch between
+        the two paths per round without perturbing the output stream."""
+        sched = self.sched
+        ns = self.num_slots
+        pending = np.zeros((ns,), np.int32)
+        pos0 = np.zeros((ns,), np.int32)
+        gen_base = np.full((ns,), -1, np.int32)
+        for r in dec:
+            s = r.slot
+            pending[s] = per_slot[s][0]
+            pos0[s] = r.prompt_len + r.gen_count - 1
+            gen_base[s] = r.gen_count - 1
+        width = _live_width(
+            pages_for(int(pos0.max()) + self.sync_every, self.page_size),
+            self.pages_per_slot)
+        bt = sched.block_table[:, :width].copy()
+        bt[~self._active] = SCRATCH_PAGE
+        with self._tr.span("decode", track="engine", slots=len(dec),
+                           chunk=self.sync_every, width=width):
+            toks, lps, self.pool = _spec_decode_chunk_jit(
+                self.cfg, self.rl, self.params, self.pool,
+                self._dev("bt.fallback", bt), jnp.asarray(pending),
+                jnp.asarray(pos0), jnp.asarray(self._active),
+                self._dev("req_keys", self._req_keys),
+                jnp.asarray(gen_base), self._dev("max_new", self._max_new),
+                self.vocab_limit, self.sync_every, plan=self.plan)
+        sched.stats["decode_steps"] += self.sync_every
+        sched.stats["spec_fallback_chunks"] += 1
+        self._m_decode_steps.inc(self.sync_every)
+        # one deliberate sync per chunk (the decode path's amortization)
+        tok_np, lp_np = np.asarray(toks), np.asarray(lps)  # noqa: RA003
+        for r in dec:
+            for i in range(self.sync_every):
+                if r.gen_count >= r.max_new:
+                    break
+                t = int(tok_np[i, r.slot])
+                r.tokens.append(t)
+                r.logps.append(float(lp_np[i, r.slot]))
+                sched.stats["decode_slot_steps"] += 1
+                if r.gen_count == 1:
+                    r.t_first_token = now
+                events.append(TokenEvent(rid=r.rid, token=t,
+                                         logp=r.logps[-1],
+                                         index=r.gen_count - 1))
+                if t == EOS:
+                    break
+            self._pos[r.slot] = r.next_pos
+            self._gen[r.slot] = r.gen_count
+            reason = ""
+            if r.tokens and r.tokens[-1] == EOS:
+                reason = "eos"
+            elif r.gen_count >= r.max_new:
+                reason = "length"
+            if reason:
+                self._active[r.slot] = False
+                self._spec_ema.pop(r.rid, None)
+                sched.finish(r, reason, now)
+                self._finish_result(r)
+                events.append(TokenEvent(rid=r.rid, token=-1, logp=0.0,
+                                         index=r.gen_count, finished=True,
+                                         finish_reason=reason))
 
     # ------------------------------------------------------------------
     def generate(self, requests: Sequence[Request],

@@ -200,7 +200,11 @@ def build_engine(cfg: ModelConfig, params, serve: ServeConfig, *,
                 num_pages=serve.resolved_num_pages,
                 vocab_limit=vocab_limit, plan=plan,
                 prefix_cache=serve.prefix_cache,
-                prefix_cache_entries=serve.prefix_cache_entries, key=key)
+                prefix_cache_entries=serve.prefix_cache_entries,
+                spec_k=serve.spec_k,
+                spec_ngram_max=serve.spec_ngram_max,
+                spec_ngram_min=serve.spec_ngram_min,
+                spec_rescore=serve.spec_rescore, key=key)
         warnings.warn(f"{cfg.name}: continuous engine unsupported for this "
                       "architecture/memory setup; serving static",
                       stacklevel=2)

@@ -33,7 +33,10 @@ def filter_logits(logits: jax.Array, *, temperature: float = 1.0,
         logits = logits / jnp.maximum(temperature, 1e-6)
     v = logits.shape[-1]
     if top_k and top_k < v:
-        kth = jnp.sort(logits, axis=-1)[..., v - top_k][..., None]
+        # k-th largest via lax.top_k (O(V·k)) — the full-vocab sort this
+        # replaces was O(V log V); thresholding keeps tie behavior
+        # identical (everything strictly below the k-th value is masked)
+        kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
         logits = jnp.where(logits < kth, NEG_INF, logits)
     if top_p < 1.0:
         sorted_logits = jnp.sort(logits, axis=-1)[..., ::-1]

@@ -63,6 +63,7 @@ class GenRequest:
     cow_dst: int = -1             # ... into this freshly allocated page
     tokens: List[int] = dataclasses.field(default_factory=list)
     logps: List[float] = dataclasses.field(default_factory=list)
+    spec_ok: bool = True          # request opts in to speculative decode
     finish_reason: str = ""       # "eos" | "length" | "expired"
     t_first_token: float = -1.0   # host clock at first decoded token
     t_done: float = -1.0
@@ -106,6 +107,10 @@ class ContinuousScheduler:
             "max_active": 0, "decode_steps": 0, "decode_slot_steps": 0,
             "prefill_chunks": 0, "prefill_tokens": 0,
             "prefix_hits": 0, "prefix_tokens_reused": 0, "cow_copies": 0,
+            # speculative decode (zero when spec_k == 0)
+            "spec_rounds": 0, "spec_slot_rounds": 0,
+            "drafted_tokens_total": 0, "accepted_tokens_total": 0,
+            "draft_hits": 0, "spec_fallback_chunks": 0,
         }
 
     # ------------------------------------------------------------------

@@ -47,6 +47,13 @@ class SamplingParams:
     top_k: int = 20
     top_p: float = 0.95
     max_new_tokens: int = 32
+    # opt this request in to speculative decode when the engine runs
+    # with spec_k > 0 (acceptance preserves the sampled distribution
+    # exactly, so this is a latency knob, not a quality one; opted-out
+    # requests still verify through the same executable with an empty
+    # draft window). Not part of ``profile`` — spec never changes which
+    # decode distribution a request samples from.
+    spec: bool = True
 
     def __post_init__(self) -> None:
         if not math.isfinite(self.temperature) or self.temperature < 0:

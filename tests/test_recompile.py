@@ -14,7 +14,8 @@ import pytest
 
 from repro.analysis.sentinel import (RecompileSentinel, executable_bound,
                                      pow2_bucket_count,
-                                     prefill_executable_bound)
+                                     prefill_executable_bound,
+                                     spec_verify_executable_bound)
 from repro.config import ATTN, MLP, ModelConfig, RLConfig
 from repro.models import init_params
 from repro.sampling import ContinuousEngine
@@ -121,6 +122,36 @@ class TestEngineExecutableBound:
         with RecompileSentinel("ref-steady") as steady:
             r2 = _epoch(eng, rl, rid0=100)
         steady.assert_bound(0, "ref-impl steady epoch")
+        assert len(r1) == len(WORKLOAD) and len(r2) == len(WORKLOAD)
+
+    def test_spec_varying_acceptance_steady_zero(self):
+        """Speculative decoding under the same budget discipline: the
+        verify executable keys on (pow2 verify width, pow2 table width)
+        only, so per-round acceptance lengths — which vary freely within
+        an epoch — trigger zero new compiles once the width buckets are
+        warm. Greedy profile (top_k=1) makes both epochs emit identical
+        token streams, hence identical width sequences."""
+        rl = RLConfig(temperature=1.0, top_k=1, top_p=1.0,
+                      max_new_tokens=8)
+        params = init_params(TINY, jax.random.PRNGKey(0))
+        eng = ContinuousEngine(TINY, params, rl=rl, max_total_tokens=32,
+                               num_slots=NUM_SLOTS, page_size=4,
+                               sync_every=2, prefill_chunk=PREFILL_CHUNK,
+                               vocab_limit=20, prefix_cache=False,
+                               spec_k=4, key=jax.random.PRNGKey(1))
+        bound = (spec_verify_executable_bound(4, eng.pages_per_slot)
+                 + prefill_executable_bound(PREFILL_CHUNK,
+                                            eng.pages_per_slot)
+                 + NUM_SLOTS * PREFILL_CHUNK + 8)
+        with RecompileSentinel("spec-cold") as cold:
+            r1 = _epoch(eng, rl, rid0=0)
+        assert cold.compiles > 0
+        cold.assert_bound(bound, "spec cold epoch")
+        with RecompileSentinel("spec-steady") as steady:
+            r2 = _epoch(eng, rl, rid0=100)
+        steady.assert_bound(0, "spec steady-state epoch")
+        st = eng.stats()
+        assert st["spec_rounds"] > 0 and st["drafted_tokens_total"] > 0
         assert len(r1) == len(WORKLOAD) and len(r2) == len(WORKLOAD)
 
     def test_assert_bound_raises(self):
